@@ -1,0 +1,123 @@
+"""Kernel micro-benchmarks.
+
+On this CPU-only container the Pallas kernels execute in interpret mode
+(correctness, not speed), so the timings reported here are for the jnp
+oracle paths (the XLA-compiled baselines the kernels must beat on real
+TPUs); the derived column carries the analytic FLOPs so TPU-side MFU can be
+projected.  Correctness (kernel == oracle) is asserted per call."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import decode_attention, decode_attention_ref
+from repro.kernels.flash import attention_ref, flash_attention
+from repro.kernels.mlstm import mlstm_chunk, mlstm_ref
+from repro.kernels.moe_gemm import grouped_gemm, grouped_gemm_ref
+from repro.kernels.rglru import rglru_scan, rglru_scan_ref
+
+from .common import emit_csv_row, timed
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list:
+    rows = []
+    # flash attention
+    B, H, Kv, S, hd = 1, 8, 4, 1024, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, Kv, S, hd))
+    v = jax.random.normal(ks[2], (B, Kv, S, hd))
+    ref_fn = jax.jit(lambda a, b, c: attention_ref(a, b, c, causal=True))
+    ref_fn(q, k, v).block_until_ready()
+    _, secs = timed(lambda: ref_fn(q, k, v).block_until_ready())
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(q, k, v))))
+    flops = 2 * 2 * B * H * S * S * hd
+    emit_csv_row(
+        "kernel_flash/oracle_b1h8s1024d64",
+        secs * 1e6,
+        f"flops={flops:.3e};kernel_vs_oracle_maxerr={err:.1e}",
+    )
+    rows.append(("flash", secs, err))
+
+    # decode attention
+    S = 4096
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, Kv, S, hd))
+    vc = jax.random.normal(ks[2], (B, Kv, S, hd))
+    ref_fn = jax.jit(lambda a, b, c: decode_attention_ref(a, b, c, S))
+    ref_fn(q1, kc, vc).block_until_ready()
+    _, secs = timed(lambda: ref_fn(q1, kc, vc).block_until_ready())
+    got = decode_attention(q1, kc, vc, S, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(q1, kc, vc))))
+    emit_csv_row(
+        "kernel_decode/oracle_b1h8s4096",
+        secs * 1e6,
+        f"bytes={2 * B * Kv * S * hd * 4:.3e};kernel_vs_oracle_maxerr={err:.1e}",
+    )
+    rows.append(("decode", secs, err))
+
+    # rglru
+    B2, S2, D2 = 2, 1024, 512
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B2, S2, D2)))
+    x = jax.random.normal(ks[1], (B2, S2, D2))
+    h0 = jnp.zeros((B2, D2))
+    ref_fn = jax.jit(rglru_scan_ref)
+    ref_fn(a, x, h0).block_until_ready()
+    _, secs = timed(lambda: ref_fn(a, x, h0).block_until_ready())
+    got = rglru_scan(a, x, h0, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(a, x, h0))))
+    emit_csv_row(
+        "kernel_rglru/oracle_b2s1024d512",
+        secs * 1e6,
+        f"elements={B2 * S2 * D2:.3e};kernel_vs_oracle_maxerr={err:.1e}",
+    )
+    rows.append(("rglru", secs, err))
+
+    # mlstm
+    B3, H3, S3, hd3 = 1, 4, 512, 64
+    ks5 = jax.random.split(KEY, 5)
+    q3 = jax.random.normal(ks5[0], (B3, H3, S3, hd3))
+    k3 = jax.random.normal(ks5[1], (B3, H3, S3, hd3)) / np.sqrt(hd3)
+    v3 = jax.random.normal(ks5[2], (B3, H3, S3, hd3))
+    li = jax.random.normal(ks5[3], (B3, H3, S3))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks5[4], (B3, H3, S3)) + 2.0)
+    ref_fn = jax.jit(mlstm_ref)
+    ref_fn(q3, k3, v3, li, lf).block_until_ready()
+    _, secs = timed(lambda: ref_fn(q3, k3, v3, li, lf).block_until_ready())
+    got = mlstm_chunk(q3, k3, v3, li, lf, chunk=128, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(q3, k3, v3, li, lf))))
+    emit_csv_row(
+        "kernel_mlstm/oracle_b1h4s512d64",
+        secs * 1e6,
+        f"kernel_vs_oracle_maxerr={err:.1e}",
+    )
+    rows.append(("mlstm", secs, err))
+
+    # grouped gemm
+    E, C, D4, F = 8, 256, 512, 1024
+    x4 = jax.random.normal(ks[0], (E, C, D4), jnp.bfloat16)
+    w4 = jax.random.normal(ks[1], (E, D4, F), jnp.bfloat16) * 0.05
+    ref_fn = jax.jit(grouped_gemm_ref)
+    ref_fn(x4, w4).block_until_ready()
+    _, secs = timed(lambda: ref_fn(x4, w4).block_until_ready())
+    got = grouped_gemm(x4, w4, interpret=True)
+    err = float(
+        jnp.max(jnp.abs(got.astype(jnp.float32) - ref_fn(x4, w4).astype(jnp.float32)))
+    )
+    emit_csv_row(
+        "kernel_moe_gemm/oracle_e8c256d512f1024",
+        secs * 1e6,
+        f"flops={2 * E * C * D4 * F:.3e};kernel_vs_oracle_maxerr={err:.1e}",
+    )
+    rows.append(("moe_gemm", secs, err))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Scheduling latency vs topology size (paper §3: "scheduling decisions need
+to be made in a snappy manner" — Nimbus invokes the scheduler every 10 s).
+
+R-Storm is O(tasks × nodes); we verify the absolute cost stays far below the
+10 s scheduling round even for 1000-task topologies on 256-node clusters.
+"""
+
+from __future__ import annotations
+
+from repro.core import (
+    Cluster,
+    Component,
+    RoundRobinScheduler,
+    RStormScheduler,
+    Topology,
+)
+
+from .common import emit_csv_row, timed
+
+
+def chain_topology(components: int, parallelism: int) -> Topology:
+    t = Topology(f"chain{components}x{parallelism}")
+    prev = None
+    for i in range(components):
+        c = Component(f"c{i}", is_spout=(i == 0), parallelism=parallelism)
+        c.set_memory_load(128.0).set_cpu_load(10.0)
+        t.add_component(c)
+        if prev:
+            t.add_edge(prev, c.id)
+        prev = c.id
+    return t
+
+
+def run() -> list:
+    rows = []
+    for comps, par, racks, nodes_per_rack in (
+        (4, 4, 2, 6),
+        (8, 8, 2, 12),
+        (16, 16, 4, 16),
+        (25, 40, 8, 32),  # 1000 tasks, 256 nodes
+    ):
+        topo = chain_topology(comps, par)
+        cluster = Cluster.homogeneous(
+            racks=racks, nodes_per_rack=nodes_per_rack, memory_mb=65536.0, cpu=6400.0
+        )
+        for label, sched in (
+            ("rstorm", RStormScheduler()),
+            ("default", RoundRobinScheduler()),
+        ):
+            cluster.reset()
+            a, secs = timed(lambda: sched.schedule(topo, cluster, commit=False), repeat=2)
+            emit_csv_row(
+                f"sched_overhead/{label}_t{comps * par}_n{racks * nodes_per_rack}",
+                secs * 1e6,
+                f"tasks={comps * par};nodes={racks * nodes_per_rack};"
+                f"complete={a.is_complete(topo)}",
+            )
+            rows.append((label, comps * par, racks * nodes_per_rack, secs))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

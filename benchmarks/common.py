@@ -1,0 +1,57 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.core import (
+    Cluster,
+    RoundRobinScheduler,
+    RStormScheduler,
+    Scheduler,
+    emulab_cluster,
+)
+from repro.stream import Simulator
+from repro.core.topology import Topology
+
+
+def schedule_and_simulate(
+    topology: Topology,
+    scheduler: Scheduler,
+    cluster: Cluster,
+):
+    cluster.reset()
+    assignment = scheduler.schedule(topology, cluster, commit=False)
+    cluster.reset()
+    sim = Simulator(cluster)
+    return assignment, sim.run(topology, assignment)
+
+
+def compare_schedulers(
+    topology_factory: Callable[[], Topology],
+    schedulers: List[Tuple[str, Scheduler]],
+    cluster: Cluster | None = None,
+) -> Dict[str, object]:
+    cluster = cluster or emulab_cluster()
+    out = {}
+    for label, sched in schedulers:
+        topo = topology_factory()
+        _, res = schedule_and_simulate(topo, sched, cluster)
+        out[label] = res
+    return out
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kwargs) -> Tuple[object, float]:
+    """Run fn; return (result, best wall-time seconds)."""
+    best = float("inf")
+    result = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def emit_csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

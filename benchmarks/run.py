@@ -1,0 +1,40 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+BENCHES = [
+    "benchmarks.bench_network_bound",    # Fig 8
+    "benchmarks.bench_cpu_bound",        # Fig 9 + 10
+    "benchmarks.bench_yahoo",            # Fig 12
+    "benchmarks.bench_multi_topology",   # Fig 13
+    "benchmarks.bench_scheduler_overhead",
+    "benchmarks.bench_placement",        # mesh-placement quality (DESIGN §2.2)
+    "benchmarks.bench_kernels",          # Pallas kernel oracles
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in BENCHES:
+        try:
+            mod = importlib.import_module(mod_name)
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+            continue
+        try:
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"FAILED benches: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Fault-tolerance walkthrough (DESIGN.md §5):
+
+1. schedule the Yahoo PageLoad topology with R-Storm;
+2. kill a worker node — the rescheduler re-places only the orphaned tasks;
+3. detect and migrate a straggler via the StatisticServer feed;
+4. scale the cluster up elastically and watch unassigned tasks land.
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+
+from repro.core import (
+    GlobalState,
+    NodeSpec,
+    Rescheduler,
+    RStormScheduler,
+    StragglerMitigator,
+    emulab_cluster,
+)
+from repro.stream import Simulator, topologies
+
+
+def show(sim, topo, assignment, label):
+    res = sim.run(topo, assignment)
+    print(
+        f"  [{label}] throughput={res.sink_throughput:8.1f}/s "
+        f"machines={res.machines_used} binding={res.binding} "
+        f"unassigned={len(assignment.unassigned)}"
+    )
+    return res
+
+
+def main() -> None:
+    cluster = emulab_cluster()
+    gs = GlobalState(cluster)
+    topo = topologies.pageload()
+    print(f"1) scheduling {topo.id} on {cluster}")
+    assignment = gs.submit(topo, RStormScheduler())
+    sim = Simulator(cluster)
+    show(sim, topo, assignment, "initial")
+
+    victim = assignment.nodes_used()[0]
+    print(f"\n2) node failure: {victim}")
+    resch = Rescheduler(gs)
+    moved = resch.handle_node_failure(victim)
+    print(f"   migrated tasks: {moved.get(topo.id, [])}")
+    show(sim, topo, assignment, "after failover")
+
+    print("\n3) straggler mitigation")
+    times = {t.id: 0.002 for t in topo.all_tasks()}
+    straggler = next(iter(assignment.placements))
+    times[straggler] = 1.0
+    mit = StragglerMitigator(gs)
+    found = mit.find_stragglers(times)
+    moves = mit.migrate(found)
+    print(f"   detected {found} -> moved to {list(moves.values())}")
+
+    print("\n4) elastic scale-up: fail half the cluster, then add a fresh rack")
+    for nid in list(assignment.nodes_used())[:3]:
+        resch.handle_node_failure(nid)
+    print(f"   after failures: unassigned={len(assignment.unassigned)}")
+    resch.handle_scale_up(
+        [NodeSpec(f"fresh{i}", "rack_fresh", 100.0, 2048.0) for i in range(6)]
+    )
+    show(sim, topo, assignment, "after scale-up")
+    assert assignment.is_complete(topo)
+    print("\nall tasks placed; the plan is a pure function of (topology, cluster).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: schedule the paper's topologies with R-Storm vs default Storm
+and simulate throughput (paper Fig 8/12 in one minute).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (
+    RoundRobinScheduler,
+    RStormScheduler,
+    emulab_cluster,
+)
+from repro.stream import Simulator, topologies
+
+
+def main() -> None:
+    cluster = emulab_cluster()
+    sim = Simulator(cluster)
+    print(f"cluster: {cluster}")
+    print(f"{'topology':14s} {'default':>12s} {'rstorm':>12s} {'gain':>8s}  binding/machines")
+    for maker in (
+        lambda: topologies.linear(network_bound=True),
+        lambda: topologies.diamond(network_bound=True),
+        lambda: topologies.star(network_bound=True),
+        topologies.pageload,
+        topologies.processing,
+    ):
+        topo = maker()
+        cluster.reset()
+        rr = RoundRobinScheduler(seed=1).schedule(topo, cluster, commit=False)
+        cluster.reset()
+        rs = RStormScheduler().schedule(topo, cluster, commit=False)
+        cluster.reset()
+        res_rr = sim.run(topo, rr)
+        res_rs = sim.run(topo, rs)
+        gain = (res_rs.sink_throughput / max(res_rr.sink_throughput, 1e-9) - 1) * 100
+        print(
+            f"{topo.id:14s} {res_rr.sink_throughput:10.0f}/s {res_rs.sink_throughput:10.0f}/s "
+            f"{gain:+7.1f}%  {res_rs.binding}, {res_rs.machines_used} vs "
+            f"{res_rr.machines_used} machines"
+        )
+    print(
+        "\nR-Storm packs communicating tasks onto few machines under the hard"
+        "\nmemory constraint — the default scheduler scatters them (paper §6)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+# The paper's primary contribution: R-Storm resource-aware scheduling
+# (Alg 1-4), the round-robin default-Storm baseline, multi-topology global
+# state, and failure/elastic rescheduling.
+from .resources import (
+    BANDWIDTH,
+    CPU,
+    MEMORY,
+    ResourceVector,
+    demand,
+    weighted_distance,
+)
+from .topology import Component, Task, Topology
+from .cluster import Cluster, Node, NodeSpec, emulab_cluster, emulab_cluster_24
+from .traversal import bfs_topology_traversal, task_selection
+from .node_selection import NodeSelector
+from .assignment import Assignment
+from .schedulers import (
+    AnnealedScheduler,
+    RoundRobinScheduler,
+    RStormPlusScheduler,
+    RStormScheduler,
+    SCHEDULERS,
+    Scheduler,
+    get_scheduler,
+)
+from .multitopology import GlobalState
+from .rescheduler import Rescheduler, StragglerMitigator
+
+__all__ = [
+    "BANDWIDTH",
+    "CPU",
+    "MEMORY",
+    "ResourceVector",
+    "demand",
+    "weighted_distance",
+    "Component",
+    "Task",
+    "Topology",
+    "Cluster",
+    "Node",
+    "NodeSpec",
+    "emulab_cluster",
+    "emulab_cluster_24",
+    "bfs_topology_traversal",
+    "task_selection",
+    "NodeSelector",
+    "Assignment",
+    "Scheduler",
+    "RStormScheduler",
+    "RoundRobinScheduler",
+    "RStormPlusScheduler",
+    "AnnealedScheduler",
+    "SCHEDULERS",
+    "get_scheduler",
+    "GlobalState",
+    "Rescheduler",
+    "StragglerMitigator",
+]

@@ -1,0 +1,57 @@
+"""Multi-topology scheduling (paper §6.5) and the GlobalState module (§5.1).
+
+GlobalState holds where every task of every topology is placed plus the
+cluster's remaining availability — Nimbus is stateless, so this is an
+explicit, reconstructible value.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from .assignment import Assignment
+from .cluster import Cluster
+from .schedulers import Scheduler
+from .topology import Topology
+
+
+@dataclasses.dataclass
+class GlobalState:
+    cluster: Cluster
+    topologies: Dict[str, Topology] = dataclasses.field(default_factory=dict)
+    assignments: Dict[str, Assignment] = dataclasses.field(default_factory=dict)
+
+    def submit(self, topology: Topology, scheduler: Scheduler) -> Assignment:
+        """Schedule a new topology on the *remaining* cluster resources.
+
+        Because schedulers commit onto the live cluster, successive topologies
+        see availability already decremented by earlier ones — this is exactly
+        the §6.5 experiment (PageLoad then Processing on a 24-node cluster).
+        """
+        if topology.id in self.topologies:
+            raise ValueError(f"topology {topology.id!r} already submitted")
+        assignment = scheduler.schedule(topology, self.cluster, commit=True)
+        self.topologies[topology.id] = topology
+        self.assignments[topology.id] = assignment
+        return assignment
+
+    def kill(self, topology_id: str) -> None:
+        """Remove a topology and return its resources to the cluster."""
+        topology = self.topologies.pop(topology_id)
+        assignment = self.assignments.pop(topology_id)
+        tasks = {t.id: t for t in topology.all_tasks()}
+        for tid, nid in assignment.placements.items():
+            node = self.cluster.nodes[nid]
+            task = tasks.get(tid)
+            if task is not None and task in node.assigned_tasks:
+                node.unassign(task, topology.demand_of(task))
+
+    def orphaned_tasks(self) -> List[str]:
+        """Tasks whose node has died — input to the rescheduler."""
+        out = []
+        for tid_topology, assignment in self.assignments.items():
+            for tid, nid in assignment.placements.items():
+                if not self.cluster.nodes[nid].alive:
+                    out.append(tid)
+        return out

@@ -1,0 +1,147 @@
+"""Failure handling and elastic rescaling (paper §3: "if there are failures
+... the scheduler must be able to produce another scheduling quickly").
+
+Only the orphaned tasks are re-placed (NodeSelection over surviving nodes —
+the same code path as initial placement); healthy placements are untouched,
+so a reschedule is O(orphans × nodes), not a full re-plan.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+from .assignment import Assignment
+from .cluster import Cluster
+from .multitopology import GlobalState
+from .node_selection import NodeSelector
+from .topology import Task, Topology
+
+
+class Rescheduler:
+    def __init__(self, state: GlobalState, weights=None):
+        self.state = state
+        self.weights = weights
+
+    def handle_node_failure(self, node_id: str) -> Dict[str, List[str]]:
+        """Fail ``node_id`` and re-place its tasks.  Returns per-topology lists
+        of task ids that were migrated (or left unassigned if infeasible)."""
+        cluster = self.state.cluster
+        cluster.fail_node(node_id)
+        return self._replace_orphans()
+
+    def handle_scale_up(self, node_specs) -> Dict[str, List[str]]:
+        """Elastic scale-up: add nodes, then re-place any unassigned tasks."""
+        from .cluster import Node
+
+        for spec in node_specs:
+            if spec.node_id in self.state.cluster.nodes:
+                raise ValueError(f"node {spec.node_id!r} already exists")
+            self.state.cluster.nodes[spec.node_id] = Node(spec)
+            self.state.cluster.racks.setdefault(spec.rack_id, []).append(spec.node_id)
+        return self._replace_orphans(include_unassigned=True)
+
+    def _replace_orphans(self, include_unassigned: bool = False) -> Dict[str, List[str]]:
+        cluster = self.state.cluster
+        moved: Dict[str, List[str]] = {}
+        for topo_id, assignment in self.state.assignments.items():
+            topology = self.state.topologies[topo_id]
+            tasks = {t.id: t for t in topology.all_tasks()}
+            orphans = [
+                tid
+                for tid, nid in assignment.placements.items()
+                if not cluster.nodes[nid].alive
+            ]
+            if include_unassigned:
+                orphans += [t for t in assignment.unassigned if t in tasks]
+            if not orphans:
+                continue
+            selector = NodeSelector(cluster, self.weights)
+            # Anchor near the surviving mass of this topology: use the node
+            # hosting most of its tasks as the ref node.
+            counts: Dict[str, int] = {}
+            for tid, nid in assignment.placements.items():
+                if cluster.nodes[nid].alive:
+                    counts[nid] = counts.get(nid, 0) + 1
+            if counts:
+                selector.ref_node = max(sorted(counts), key=lambda n: counts[n])
+            for tid in orphans:
+                task = tasks[tid]
+                d = topology.demand_of(task)
+                node = selector.select(d)
+                if tid in assignment.placements:
+                    del assignment.placements[tid]
+                if tid in assignment.unassigned:
+                    assignment.unassigned.remove(tid)
+                if node is None:
+                    assignment.unassigned.append(tid)
+                else:
+                    node.assign(task, d)
+                    assignment.placements[tid] = node.id
+                moved.setdefault(topo_id, []).append(tid)
+        return moved
+
+
+class StragglerMitigator:
+    """Migrate tasks whose observed service time exceeds ``factor`` × the
+    component median (DESIGN.md §5).  Observation feed comes from the stream
+    executor's StatisticServer."""
+
+    def __init__(self, state: GlobalState, factor: float = 3.0, weights=None):
+        self.state = state
+        self.factor = factor
+        self.weights = weights
+
+    def find_stragglers(self, service_times: Dict[str, float]) -> List[str]:
+        """service_times: task id -> EWMA seconds/tuple."""
+        import statistics
+
+        by_component: Dict[str, List[float]] = {}
+        for tid, s in service_times.items():
+            comp = tid.split("[")[0]
+            by_component.setdefault(comp, []).append(s)
+        medians = {c: statistics.median(v) for c, v in by_component.items()}
+        out = []
+        for tid, s in service_times.items():
+            comp = tid.split("[")[0]
+            med = medians[comp]
+            if med > 0 and s > self.factor * med:
+                out.append(tid)
+        return sorted(out)
+
+    def migrate(self, task_ids: List[str]) -> Dict[str, str]:
+        """Move straggling tasks to the closest feasible *other* node."""
+        cluster = self.state.cluster
+        moves: Dict[str, str] = {}
+        for topo_id, assignment in self.state.assignments.items():
+            topology = self.state.topologies[topo_id]
+            tasks = {t.id: t for t in topology.all_tasks()}
+            for tid in task_ids:
+                if tid not in assignment.placements or tid not in tasks:
+                    continue
+                old_nid = assignment.placements[tid]
+                task = tasks[tid]
+                d = topology.demand_of(task)
+                old_node = cluster.nodes[old_nid]
+                if task in old_node.assigned_tasks:
+                    old_node.unassign(task, d)
+                selector = NodeSelector(cluster, self.weights)
+                selector.ref_node = old_nid  # stay close to prior placement
+                best = None
+                import math
+
+                best_d = math.inf
+                for nid in sorted(cluster.nodes):
+                    node = cluster.nodes[nid]
+                    if nid == old_nid or not node.alive or not node.can_fit_hard(d):
+                        continue
+                    dist = selector.distance(d, node)
+                    if dist < best_d:
+                        best, best_d = node, dist
+                if best is None:  # nowhere better — put it back
+                    old_node.assign(task, d)
+                    continue
+                best.assign(task, d)
+                assignment.placements[tid] = best.id
+                moves[tid] = best.id
+        return moves

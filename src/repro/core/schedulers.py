@@ -1,0 +1,257 @@
+"""Schedulers: R-Storm (Alg 1) and the default-Storm round-robin baseline,
+plus beyond-paper variants (DESIGN.md §6).
+
+Every scheduler is a pure function of (topology, cluster-state): it never
+mutates the cluster it is given unless ``commit=True`` — matching Nimbus
+statelessness (paper §5) and enabling deterministic elastic re-planning.
+"""
+
+from __future__ import annotations
+
+import copy
+import itertools
+import random
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .assignment import Assignment
+from .cluster import Cluster
+from .node_selection import DEFAULT_SOFT_WEIGHTS, NodeSelector
+from .resources import ResourceVector
+from .topology import Task, Topology
+from .traversal import bfs_topology_traversal, task_selection
+
+
+class Scheduler:
+    """Interface mirroring Storm's IScheduler (paper §5)."""
+
+    name = "base"
+
+    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
+        raise NotImplementedError
+
+    # Shared plumbing ----------------------------------------------------------
+    def _finish(
+        self,
+        topology: Topology,
+        cluster: Cluster,
+        work: Cluster,
+        assignment: Assignment,
+        commit: bool,
+        t0: float,
+    ) -> Assignment:
+        assignment.scheduler_name = self.name
+        assignment.schedule_time_s = time.perf_counter() - t0
+        if commit:
+            # Atomic apply onto the real cluster (paper §4.1).
+            assignment.apply(topology, cluster)
+        return assignment
+
+
+class RStormScheduler(Scheduler):
+    """Algorithm 1: taskOrdering = TaskSelection(); for each task, NodeSelection."""
+
+    name = "rstorm"
+
+    def __init__(self, weights: Optional[Mapping[str, float]] = None):
+        self.weights = weights
+
+    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
+        t0 = time.perf_counter()
+        topology.validate()
+        # Plan against a scratch copy so planning is side-effect free.
+        work = copy.deepcopy(cluster)
+        selector = NodeSelector(work, self.weights)
+        assignment = Assignment(topology_id=topology.id)
+        for task in task_selection(topology):
+            d = topology.demand_of(task)
+            node = selector.select(d)
+            if node is None:
+                assignment.unassigned.append(task.id)
+                continue
+            node.assign(task, d)
+            assignment.placements[task.id] = node.id
+        return self._finish(topology, cluster, work, assignment, commit, t0)
+
+
+class RoundRobinScheduler(Scheduler):
+    """Default Storm: pseudo-random round-robin over worker slots (§2).
+
+    Resource demand and availability are ignored entirely (that is the
+    paper's point).  Only liveness is respected.  Two slot orderings exist in
+    deployed Storm versions:
+
+    * ``port_major`` (default): slots interleave across nodes, so tasks of a
+      single component land on different machines — the behaviour the paper
+      describes in §2;
+    * ``node_major``: a node's worker slots are consecutive, so consecutive
+      tasks (often of the *same* component) stack onto one machine — the
+      behaviour behind the paper's §6.3.2 Star bottleneck ("one of the
+      machines ... gets over utilized ... and creates a bottleneck").
+    """
+
+    name = "round_robin"
+
+    def __init__(self, seed: int = 0, slot_mode: str = "port_major"):
+        if slot_mode not in ("port_major", "node_major"):
+            raise ValueError(f"unknown slot_mode {slot_mode!r}")
+        self.seed = seed
+        self.slot_mode = slot_mode
+
+    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
+        t0 = time.perf_counter()
+        topology.validate()
+        work = copy.deepcopy(cluster)
+        rng = random.Random(self.seed)
+        nodes = sorted(n.id for n in work.live_nodes())
+        if not nodes:
+            raise RuntimeError("no live nodes")
+        rng.shuffle(nodes)  # 'pseudo-random' starting permutation
+        # Build the slot list in the configured order.
+        if self.slot_mode == "port_major":
+            slots = []
+            max_slots = max(work.nodes[n].spec.num_worker_slots for n in nodes)
+            for port in range(max_slots):
+                for n in nodes:
+                    if port < work.nodes[n].spec.num_worker_slots:
+                        slots.append(n)
+        else:  # node_major
+            slots = [
+                n for n in nodes for _ in range(work.nodes[n].spec.num_worker_slots)
+            ]
+        assignment = Assignment(topology_id=topology.id)
+        cursor = itertools.cycle(slots)
+        for task in topology.all_tasks():
+            nid = next(cursor)
+            assignment.placements[task.id] = nid
+            work.nodes[nid].assign(task, topology.demand_of(task))
+        return self._finish(topology, cluster, work, assignment, commit, t0)
+
+
+class RStormPlusScheduler(RStormScheduler):
+    """Beyond-paper variant (DESIGN.md §6.1):
+
+    (a) the Ref Node follows the last successfully used node per *component*,
+        so wide topologies anchor each branch locally instead of pulling every
+        branch toward one global anchor;
+    (b) among equidistant candidates, prefers the node already hosting an
+        upstream peer of the task (explicit quadratic-term credit).
+    """
+
+    name = "rstorm_plus"
+
+    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
+        t0 = time.perf_counter()
+        topology.validate()
+        work = copy.deepcopy(cluster)
+        selector = NodeSelector(work, self.weights)
+        assignment = Assignment(topology_id=topology.id)
+        upstream_of = {cid: set(topology.upstream(cid)) for cid in topology.components}
+        placed_by_component: Dict[str, List[str]] = {}
+        for task in task_selection(topology):
+            d = topology.demand_of(task)
+            # (b) credit: nodes hosting upstream peers get a distance discount.
+            peers = set()
+            for up in upstream_of[task.component_id]:
+                peers.update(placed_by_component.get(up, []))
+            node = self._select_with_credit(selector, work, d, peers)
+            if node is None:
+                assignment.unassigned.append(task.id)
+                continue
+            node.assign(task, d)
+            assignment.placements[task.id] = node.id
+            placed_by_component.setdefault(task.component_id, []).append(node.id)
+            # (a) per-branch anchoring.
+            selector.ref_node = node.id
+        return self._finish(topology, cluster, work, assignment, commit, t0)
+
+    @staticmethod
+    def _select_with_credit(selector: NodeSelector, work: Cluster, d: ResourceVector, peers) -> Optional[object]:
+        import math
+
+        if selector.ref_node is None or not work.nodes[selector.ref_node].alive:
+            selector._establish_ref_node()
+        best, best_d = None, math.inf
+        for nid in sorted(work.nodes):
+            node = work.nodes[nid]
+            if not node.alive or not node.can_fit_hard(d):
+                continue
+            dist = selector.distance(d, node)
+            if nid in peers:
+                dist *= 0.75  # colocate-with-upstream credit
+            if dist < best_d - 1e-12:
+                best, best_d = node, dist
+        return best
+
+
+class AnnealedScheduler(Scheduler):
+    """Beyond-paper (DESIGN.md §6.2): R-Storm seed + pairwise-swap local search
+    minimizing (network cost, soft overload) lexicographically.
+
+    Deliberately budgeted (``iters``) to stay within the paper's "snappy
+    scheduling" requirement.
+    """
+
+    name = "rstorm_annealed"
+
+    def __init__(self, iters: int = 400, seed: int = 0, weights=None):
+        self.iters = iters
+        self.seed = seed
+        self.weights = weights
+
+    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
+        t0 = time.perf_counter()
+        seed_assignment = RStormScheduler(self.weights).schedule(
+            topology, cluster, commit=False
+        )
+        rng = random.Random(self.seed)
+        placements = dict(seed_assignment.placements)
+        tasks = {t.id: t for t in topology.all_tasks()}
+        demands = {tid: topology.demand_of(t) for tid, t in tasks.items()}
+        tids = sorted(placements)
+
+        def mem_overload(pl: Dict[str, str]) -> float:
+            used: Dict[str, float] = {}
+            for tid, nid in pl.items():
+                used[nid] = used.get(nid, 0.0) + demands[tid]["memory_mb"]
+            over = 0.0
+            for nid, u in used.items():
+                cap = cluster.nodes[nid].spec.memory_capacity_mb
+                over += max(0.0, u - cap)
+            return over
+
+        def cost(pl: Dict[str, str]) -> float:
+            a = Assignment(topology.id, placements=pl)
+            return a.network_cost(topology, cluster) + 1e6 * mem_overload(pl)
+
+        cur = cost(placements)
+        if len(tids) >= 2:
+            for _ in range(self.iters):
+                a, b = rng.sample(tids, 2)
+                if placements[a] == placements[b]:
+                    continue
+                placements[a], placements[b] = placements[b], placements[a]
+                new = cost(placements)
+                if new <= cur:
+                    cur = new
+                else:
+                    placements[a], placements[b] = placements[b], placements[a]
+        out = Assignment(
+            topology_id=topology.id,
+            placements=placements,
+            unassigned=list(seed_assignment.unassigned),
+        )
+        return self._finish(topology, cluster, copy.deepcopy(cluster), out, commit, t0)
+
+
+SCHEDULERS: Dict[str, type] = {
+    cls.name: cls
+    for cls in (RStormScheduler, RoundRobinScheduler, RStormPlusScheduler, AnnealedScheduler)
+}
+
+
+def get_scheduler(name: str, **kwargs) -> Scheduler:
+    try:
+        return SCHEDULERS[name](**kwargs)
+    except KeyError:
+        raise KeyError(f"unknown scheduler {name!r}; have {sorted(SCHEDULERS)}") from None

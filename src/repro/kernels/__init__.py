@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with an
+# ops.py jit wrapper and a ref.py pure-jnp oracle (validated interpret=True):
+#   flash/       — causal/sliding-window GQA flash attention
+#   decode_attn/ — flash-decoding (single token vs long KV cache)
+#   rglru/       — RG-LRU diagonal linear recurrence (doubling scan)
+#   mlstm/       — chunkwise mLSTM (matrix memory)
+#   moe_gemm/    — grouped expert GEMM (MoE dispatch buffers)
+from . import decode_attn, flash, mlstm, moe_gemm, rglru
+
+__all__ = ["decode_attn", "flash", "mlstm", "moe_gemm", "rglru"]

@@ -1,0 +1,5 @@
+from .decode_attention import decode_attention
+from .ops import decode_attention_op
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention", "decode_attention_op", "decode_attention_ref"]

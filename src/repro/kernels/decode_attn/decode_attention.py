@@ -1,0 +1,93 @@
+"""Flash-decoding Pallas kernel: one query token vs a long KV cache.
+
+The KV sequence is tiled into VMEM blocks iterated on the innermost
+(sequential) grid dimension with online-softmax accumulators in scratch —
+the TPU analogue of GPU split-K flash decoding (partials per K-split merged
+by rescaling; here the merge happens in-order in scratch, which on TPU keeps
+the MXU busy without a separate reduction kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, blk_k: int, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * blk_k
+
+    @pl.when(k_start < length)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (1, hd) row
+        k = k_ref[0, 0].astype(jnp.float32)          # (blk_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (1, blk_k)
+        j = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, blk_k), 1)
+        s = jnp.where(j < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = False) -> jax.Array:
+    """q (B,H,hd); k/v (B,Kv,S,hd); length scalar int32."""
+    B, H, hd = q.shape
+    Kv, S = k.shape[1], k.shape[2]
+    G = H // Kv
+    blk_k = min(block_k, S)
+    assert S % blk_k == 0
+    n_k = S // blk_k
+    q4 = q[:, :, None, :]  # (B,H,1,hd)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    kernel = functools.partial(
+        _decode_kernel, scale=1.0 / (hd ** 0.5), blk_k=blk_k, n_k=n_k
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd), lambda b, h, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q4, k, v)
+    return out[:, :, 0, :]

@@ -1,0 +1,21 @@
+"""Jitted wrapper for decode attention (model layout)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_op(q, k_cache, v_cache, length, *, block_k: int = 512,
+                        interpret: bool = False):
+    """q (B,1,H,hd); caches (B,S,Kv,hd); length scalar."""
+    qt = q[:, 0].transpose(0, 1, 2) if q.ndim == 4 else q
+    qt = q[:, 0]                       # (B,H,hd)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B,Kv,S,hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    out = decode_attention(qt, kt, vt, length, block_k=block_k, interpret=interpret)
+    return out[:, None]                # (B,1,H,hd)

@@ -1,0 +1,27 @@
+"""Oracle for single-token decode attention over a KV cache.
+
+q (B, H, hd); cache k/v (B, Kv, S, hd); valid length `length` (attend to
+positions < length).  Output (B, H, hd).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, length) -> jax.Array:
+    B, H, hd = q.shape
+    Kv, S = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bksh->bkgs", qg, k.astype(jnp.float32)) / jnp.sqrt(
+        jnp.array(hd, jnp.float32)
+    )
+    mask = jnp.arange(S)[None] < length
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .flash_attention import flash_attention
+from .ops import flash_attention_op
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_op", "attention_ref"]

@@ -1,0 +1,144 @@
+"""Flash attention Pallas-TPU kernel: online-softmax tiling with explicit
+BlockSpec VMEM blocks, causal + sliding-window masking, GQA via kv-head
+index mapping.
+
+TPU adaptation (DESIGN.md §2.3): block shapes are MXU-aligned (q/k blocks a
+multiple of 128 on the sequence dims, head_dim padded to 128 by the caller
+when needed); the k-loop is the innermost *sequential* grid dimension with
+f32 accumulators held in VMEM scratch across iterations — the TPU-native
+reformulation of the GPU warp-level flash loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    m_scr, l_scr, acc_scr,        # scratch: (blk_q,1), (blk_q,1), (blk_q,hd)
+    *,
+    scale: float,
+    blk_q: int,
+    blk_k: int,
+    n_k: int,
+    causal: bool,
+    window: Optional[int],
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+
+    # Block-level relevance (causal: k block must not be entirely in the
+    # future; windowed: nor entirely older than the window).
+    relevant = True
+    if causal:
+        relevant = k_start <= q_start + blk_q - 1
+        if window is not None:
+            relevant = jnp.logical_and(
+                relevant, k_start + blk_k - 1 > q_start - window
+            )
+
+    @pl.when(relevant)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (blk_q, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (blk_k, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (blk_q, blk_k)
+        if causal:
+            i = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            j = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+            mask = j <= i
+            if window is not None:
+                mask = jnp.logical_and(mask, j > i - window)
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                           # (blk_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # (blk_q, blk_k)
+        alpha = jnp.exp(m_prev - m_new)               # (blk_q, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, H, Sq, hd)
+    k: jax.Array,                  # (B, Kv, Sk, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    assert H % Kv == 0, (H, Kv)
+    G = H // Kv
+    blk_q = min(block_q, Sq)
+    blk_k = min(block_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    n_q, n_k = Sq // blk_q, Sk // blk_k
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        n_k=n_k,
+        causal=causal,
+        window=window,
+    )
+    grid = (B, H, n_q, n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, blk_k, hd), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((blk_q, 1)),
+            _vmem((blk_q, 1)),
+            _vmem((blk_q, hd)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

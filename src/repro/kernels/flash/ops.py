@@ -1,0 +1,36 @@
+"""Jitted wrapper: model layout (B,S,H,hd) <-> kernel layout (B,H,S,hd)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention_op(
+    q: jax.Array,                  # (B, S, H, hd) — model layout
+    k: jax.Array,                  # (B, S, Kv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / bidir GQA).
+
+Layout convention for the kernels package: q (B, H, S, hd); k, v
+(B, Kv, S, hd); output (B, H, S, hd).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / jnp.sqrt(
+        jnp.array(hd, jnp.float32)
+    )
+    if causal:
+        i = jnp.arange(Sq)[:, None]
+        j = jnp.arange(Sk)[None, :]
+        m = j <= i
+        if window is not None:
+            m = m & (j > i - window)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", w, vf)
+    return out.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .mlstm_chunk import mlstm_chunk
+from .ops import mlstm_chunk_op
+from .ref import mlstm_ref
+
+__all__ = ["mlstm_chunk", "mlstm_chunk_op", "mlstm_ref"]

@@ -1,0 +1,106 @@
+"""Chunkwise mLSTM Pallas kernel (xLSTM matrix memory).
+
+TPU adaptation (DESIGN.md §2.3): within a VMEM chunk the (L,L) decay-gated
+score matrix and the (L,hd) outputs are MXU matmuls; the running matrix
+memory C (hd,hd), normalizer n (hd,) and stabilizer m (scalar) live in VMEM
+scratch across the sequential chunk dimension.  This is the mLSTM analogue
+of flash attention's online accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+_NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  c_scr, n_scr, m_scr, *, L: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (L, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    li = li_ref[0, 0, :, 0].astype(jnp.float32)    # (L,)
+    lf = lf_ref[0, 0, :, 0].astype(jnp.float32)
+
+    b = jnp.cumsum(lf)                             # (L,) within-chunk cum log f
+    total = b[-1]
+    m_prev = m_scr[0, 0]
+    m_inter = m_prev + b                           # (L,)
+    dmat = b[:, None] - b[None, :] + li[None, :]   # (L, L)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (L, L), 1
+    )
+    dmat = jnp.where(tri, dmat, _NEG)
+    m_intra = jnp.max(dmat, axis=1)                # (L,)
+    m_new = jnp.maximum(m_inter, m_intra)          # (L,)
+    w_intra = jnp.exp(dmat - m_new[:, None])
+    scale_inter = jnp.exp(m_inter - m_new)         # (L,)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * w_intra                                    # (L, L)
+    num = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + scale_inter[:, None] * jax.lax.dot_general(
+        q, c_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    den = jnp.sum(scores, axis=1) + scale_inter * jnp.sum(q * n_scr[...], axis=1)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[:, None]
+    o_ref[0, 0] = h.astype(o_ref.dtype)
+
+    # State to end of chunk.
+    m_state_intra = jnp.max(total - b + li)
+    m_next = jnp.maximum(m_prev + total, m_state_intra)
+    decay_old = jnp.exp(m_prev + total - m_next)
+    w_state = jnp.exp(total - b + li - m_next)     # (L,)
+    c_scr[...] = decay_old * c_scr[...] + jax.lax.dot_general(
+        k * w_state[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    n_scr[...] = decay_old * n_scr[...] + jnp.sum(k * w_state[:, None], axis=0)[None, :]
+    m_scr[...] = jnp.full_like(m_scr, m_next)
+
+
+def mlstm_chunk(q, k, v, log_i, log_f, *, chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False):
+    """q,k,v (B,H,S,hd) (k pre-scaled); log_i/log_f (B,H,S) -> h (B,H,S,hd)."""
+    B, H, S, hd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    n_c = S // L
+    li4 = log_i[..., None]
+    lf4 = log_f[..., None]
+    kernel = functools.partial(_mlstm_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_c),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L, hd), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, li4, lf4)

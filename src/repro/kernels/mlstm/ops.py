@@ -1,0 +1,18 @@
+"""Jitted wrapper for the chunkwise mLSTM kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mlstm_chunk import mlstm_chunk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_op(q, k, v, log_i, log_f, *, chunk: int = 128, interpret: bool = False):
+    """k is scaled by 1/sqrt(hd) here (matching the model convention)."""
+    hd = q.shape[-1]
+    k = k / jnp.sqrt(jnp.array(hd, k.dtype))
+    return mlstm_chunk(q, k, v, log_i, log_f, chunk=chunk, interpret=interpret)

@@ -1,0 +1,40 @@
+"""Oracle for the mLSTM: strictly-sequential per-token recurrence (a
+different algorithm from the kernel's chunkwise form — a genuine oracle).
+
+Inputs: q,k,v (B,H,S,hd) (k pre-scaled by 1/sqrt(hd)); log_i, log_f (B,H,S).
+Output h (B,H,S,hd).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_i, log_f):
+    B, H, S, hd = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    li = log_i.astype(jnp.float32)
+    lf = log_f.astype(jnp.float32)
+
+    def body(carry, t):
+        C, n, m = carry
+        m_new = jnp.maximum(lf[:, :, t] + m, li[:, :, t])
+        fw = jnp.exp(lf[:, :, t] + m - m_new)
+        iw = jnp.exp(li[:, :, t] - m_new)
+        C = fw[..., None, None] * C + iw[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", kf[:, :, t], vf[:, :, t]
+        )
+        n = fw[..., None] * n + iw[..., None] * kf[:, :, t]
+        num = jnp.einsum("bhd,bhde->bhe", qf[:, :, t], C)
+        den = jnp.einsum("bhd,bhd->bh", qf[:, :, t], n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), jnp.arange(S))
+    return hs.transpose(1, 2, 0, 3).astype(q.dtype)

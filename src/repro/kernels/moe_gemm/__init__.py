@@ -1,0 +1,5 @@
+from .grouped_gemm import grouped_gemm
+from .ops import grouped_gemm_op
+from .ref import grouped_gemm_ref
+
+__all__ = ["grouped_gemm", "grouped_gemm_op", "grouped_gemm_ref"]

@@ -1,0 +1,57 @@
+"""Grouped expert GEMM Pallas kernel (MoE dispatch buffers).
+
+Tiled (bc, bf) output blocks per expert with a sequential contraction
+dimension accumulated in VMEM scratch; expert index is an outer parallel
+grid dimension, so each expert's tiles stream through the MXU back-to-back
+(MegaBlocks-style grouped GEMM, adapted to TPU tiling).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gg_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)   # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)   # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(di == n_d - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_gemm(x, w, *, block_c: int = 128, block_f: int = 128,
+                 block_d: int = 256, interpret: bool = False):
+    """x (E,C,D) @ w (E,D,F) -> (E,C,F), expert-wise."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    assert C % bc == 0 and F % bf == 0 and D % bd == 0
+    grid = (E, C // bc, F // bf, D // bd)
+    kernel = functools.partial(_gg_kernel, n_d=D // bd)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, d: (e, i, d)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, d: (e, d, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, d: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

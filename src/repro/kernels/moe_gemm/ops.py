@@ -1,0 +1,19 @@
+"""Jitted wrapper for the grouped expert GEMM."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .grouped_gemm import grouped_gemm
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def grouped_gemm_op(x, w, *, block_c: int = 128, block_f: int = 128,
+                    block_d: int = 256, interpret: bool = False):
+    return grouped_gemm(
+        x, w, block_c=block_c, block_f=block_f, block_d=block_d, interpret=interpret
+    )

@@ -1,0 +1,12 @@
+"""Oracle for the grouped expert GEMM: (E,C,D) x (E,D,F) -> (E,C,F)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)

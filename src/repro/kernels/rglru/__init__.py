@@ -1,0 +1,5 @@
+from .ops import rglru_scan_op
+from .ref import rglru_scan_ref
+from .rglru_scan import rglru_scan
+
+__all__ = ["rglru_scan", "rglru_scan_op", "rglru_scan_ref"]

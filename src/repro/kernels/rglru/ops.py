@@ -1,0 +1,14 @@
+"""Jitted wrapper for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .rglru_scan import rglru_scan
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rglru_scan_op(a, x, h0, *, block_t: int = 256, interpret: bool = False):
+    return rglru_scan(a, x, h0, block_t=block_t, interpret=interpret)

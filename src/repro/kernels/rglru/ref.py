@@ -1,0 +1,24 @@
+"""Oracle for the RG-LRU diagonal linear recurrence:
+h_t = a_t * h_{t-1} + x_t,   a in (0,1), per-channel.
+
+Inputs a, x: (B, S, D); initial state h0 (B, D).  Output h (B, S, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, x: jax.Array, h0: jax.Array) -> jax.Array:
+    def body(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    _, hs = jax.lax.scan(
+        body,
+        h0.astype(jnp.float32),
+        (a.astype(jnp.float32).transpose(1, 0, 2), x.astype(jnp.float32).transpose(1, 0, 2)),
+    )
+    return hs.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,68 @@
+"""RG-LRU linear-recurrence Pallas kernel.
+
+TPU adaptation (DESIGN.md §2.3): the per-channel gated recurrence
+h_t = a_t*h_{t-1} + x_t has no MXU form (the gate is diagonal), so within
+each VMEM time-block the kernel runs a log-depth doubling scan on the VPU
+(log2(T_blk) shifted multiply-adds over the whole (T_blk, D) tile), and time
+blocks are chained through a VMEM carry on the sequential grid dimension —
+HBM traffic is exactly one read of (a,x) and one write of h.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 256
+
+
+def _rglru_kernel(a_ref, x_ref, h0_ref, o_ref, carry_scr, *, blk_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        carry_scr[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)      # (blk_t, D)
+    x = x_ref[0].astype(jnp.float32)
+    # In-block inclusive scan by doubling: after k rounds, h_t aggregates
+    # inputs from t-2^k+1..t and prod_t the gate product over that span.
+    h = x
+    prod = a
+    step = 1
+    while step < blk_t:
+        h_shift = jnp.pad(h, ((step, 0), (0, 0)))[:blk_t]
+        p_shift = jnp.pad(prod, ((step, 0), (0, 0)), constant_values=1.0)[:blk_t]
+        h = h + prod * h_shift
+        prod = prod * p_shift
+        step *= 2
+    # Chain the carry from previous blocks.
+    h = h + prod * carry_scr[...]          # carry (1, D) broadcasts over time
+    o_ref[0] = h.astype(o_ref.dtype)
+    carry_scr[...] = h[-1:]
+
+
+def rglru_scan(a, x, h0, *, block_t: int = DEFAULT_BLOCK_T, interpret: bool = False):
+    """a, x: (B, S, D); h0 (B, D) -> h (B, S, D)."""
+    B, S, D = x.shape
+    blk_t = min(block_t, S)
+    assert S % blk_t == 0
+    n_t = S // blk_t
+    kernel = functools.partial(_rglru_kernel, blk_t=blk_t)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_t),
+        in_specs=[
+            pl.BlockSpec((1, blk_t, D), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, blk_t, D), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, D), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_t, D), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(a, x, h0)

@@ -1,0 +1,6 @@
+# NOTE: dryrun is intentionally NOT imported here — it sets XLA_FLAGS at
+# import time and must only ever be the first jax-touching import of a
+# dedicated process (python -m repro.launch.dryrun).
+from .mesh import make_production_mesh, make_smoke_mesh, mesh_shape
+
+__all__ = ["make_production_mesh", "make_smoke_mesh", "mesh_shape"]

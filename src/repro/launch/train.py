@@ -1,0 +1,139 @@
+"""Distributed training launcher: planner → mesh → sharded train loop with
+async checkpointing and restart-on-failure semantics.
+
+On real hardware this runs under `jax.distributed` with one process per host
+and the production mesh; on this container pass ``--devices N`` to force N
+host devices (the code path — planner, NamedShardings, donation, checkpoint
+resume — is identical).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --devices 8 --steps 30 --batch 16 --seq-len 64
+"""
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=0, help="force N host devices")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}"
+        )
+
+    # jax import AFTER the device-count flag.
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from .. import configs
+    from ..configs.base import ShapeCell
+    from ..data import LMDataset, Prefetcher
+    from ..models import build
+    from ..placement import MeshShape, ResourceAwarePlanner, activation_rules
+    from ..train import (
+        AdamWConfig,
+        AsyncCheckpointer,
+        TrainOptions,
+        init_train_state,
+        latest_step,
+        make_train_step,
+        restore_checkpoint,
+    )
+    from .mesh import make_smoke_mesh
+
+    model = build(args.arch, smoke=args.smoke)
+    cfg = model.cfg
+    mesh = make_smoke_mesh()
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mshape = MeshShape(axes)
+    shape = ShapeCell("launch", args.seq_len, args.batch, "train")
+    planner = ResourceAwarePlanner()
+    plan = planner.plan(model, shape, mshape)
+    print(
+        f"[train] arch={cfg.arch} devices={mesh.devices.size} mesh={axes} "
+        f"fsdp={plan.fsdp} n_micro={plan.n_micro} "
+        f"est={plan.memory.total / 2**30:.2f} GiB/dev"
+    )
+
+    opts = TrainOptions(
+        opt=AdamWConfig(lr=3e-4, warmup_steps=10, total_steps=args.steps),
+        n_micro=max(args.n_micro, plan.n_micro),
+        compress_grads=args.compress_grads,
+    )
+
+    def shardings(tree_spec):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            tree_spec,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    params_sh = shardings(plan.param_specs)
+    state_sh = {
+        "params": params_sh,
+        "opt": {"m": params_sh, "v": params_sh, "step": NamedSharding(mesh, P())},
+    }
+    if opts.compress_grads:
+        state_sh["err"] = params_sh
+    batch_sh = shardings(plan.batch_specs)
+
+    with mesh:
+        with activation_rules(plan.activation_rules):
+            state = init_train_state(model, jax.random.PRNGKey(0), opts)
+            state = jax.device_put(state, state_sh)
+            start = 0
+            if args.resume and latest_step(args.ckpt_dir) is not None:
+                like = jax.tree_util.tree_map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+                )
+                host_state, start = restore_checkpoint(args.ckpt_dir, like)
+                state = jax.device_put(host_state, state_sh)
+                print(f"[train] resumed from step {start}")
+            step_fn = jax.jit(
+                make_train_step(model, opts),
+                in_shardings=(state_sh, batch_sh),
+                donate_argnums=(0,),
+            )
+            ds = Prefetcher(
+                iter(
+                    LMDataset(
+                        seq_len=args.seq_len,
+                        batch_size=args.batch,
+                        vocab_size=cfg.vocab,
+                    )
+                )
+            )
+            ckpt = AsyncCheckpointer(args.ckpt_dir, keep=2)
+            t0 = time.time()
+            for i in range(start, args.steps):
+                batch = next(ds)
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                state, metrics = step_fn(state, batch)
+                if (i + 1) % 10 == 0 or i + 1 == args.steps:
+                    print(
+                        f"[train] step {i + 1:4d} loss={float(metrics['loss']):.4f} "
+                        f"({(time.time() - t0) / max(i + 1 - start, 1):.2f}s/step)"
+                    )
+                if (i + 1) % 20 == 0:
+                    ckpt.save(i + 1, state)
+            ckpt.close()
+    print(f"[train] done ({args.steps} steps); checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

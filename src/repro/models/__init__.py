@@ -1,0 +1,11 @@
+from .lm import Model
+from .registry import build, build_from_config, cell_skip_reason, extend_cache, input_specs
+
+__all__ = [
+    "Model",
+    "build",
+    "build_from_config",
+    "cell_skip_reason",
+    "extend_cache",
+    "input_specs",
+]

@@ -1,0 +1,238 @@
+"""GQA attention: full-causal, sliding-window, bidirectional, and cross
+variants; forward (train/prefill) and single-token decode paths.
+
+Pure-jnp reference path (lowered for the dry-run); the Pallas flash kernels in
+``repro.kernels`` are drop-in replacements on real TPUs and are validated
+against this math in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamSpec, apply_rope, maybe_unrolled_scan, rms_norm
+
+NEG_INF = -1e30
+
+
+def attn_spec(cfg: ModelConfig, cross: bool = False) -> ParamSpec:
+    D, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    prefix = "x" if cross else ""
+    spec: ParamSpec = {
+        f"{prefix}wq": ((D, H * hd), ("embed", "q_heads"), "normal"),
+        f"{prefix}wk": ((D, Kv * hd), ("embed", "kv_heads"), "normal"),
+        f"{prefix}wv": ((D, Kv * hd), ("embed", "kv_heads"), "normal"),
+        f"{prefix}wo": ((H * hd, D), ("q_heads", "embed"), "normal"),
+    }
+    if cfg.qk_norm and not cross:
+        spec["q_norm"] = ((hd,), (None,), "ones")
+        spec["k_norm"] = ((hd,), (None,), "ones")
+    return spec
+
+
+def _project_qkv(cfg: ModelConfig, p: Dict, x: jax.Array, prefix: str = ""):
+    B, S, _ = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p[f"{prefix}wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (x @ p[f"{prefix}wk"].astype(dt)).reshape(B, S, Kv, hd)
+    v = (x @ p[f"{prefix}wv"].astype(dt)).reshape(B, S, Kv, hd)
+    if cfg.qk_norm and not prefix:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array]):
+    """q (B,Sq,H,hd), k/v (B,Sk,Kv,hd) -> (B,Sq,H*hd).  GQA via reshape."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    q = q.reshape(B, Sq, Kv, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) / jnp.sqrt(
+        jnp.array(hd, jnp.float32)
+    )
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+SDPA_BLOCK_Q = 512
+
+
+def _swa_block_skip_enabled() -> bool:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf): restrict each query
+    block's keys to its sliding window instead of scoring the full masked
+    row.  Off by default so baseline dry-runs stay paper-faithful."""
+    import os
+
+    return os.environ.get("REPRO_OPT_SWA", "0") == "1"
+
+
+def _sdpa_blocked(
+    cfg: ModelConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+):
+    """Query-blocked attention: scores for one q-block at a time, so the peak
+    intermediate is (B,Kv,G,blk,Sk) instead of (B,Kv,G,Sq,Sk).  Exact (the
+    full key row fits, so no online-softmax rescaling is required) — this is
+    the jnp oracle the Pallas flash kernel is checked against."""
+    B, Sq, H, hd = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    blk = SDPA_BLOCK_Q
+    assert Sq % blk == 0, (Sq, blk)
+    n = Sq // blk
+    qb = q.reshape(B, n, blk, Kv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    offsets = jnp.arange(n) * blk
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+
+    skip = (
+        causal
+        and window is not None
+        and _swa_block_skip_enabled()
+        and Sk > window + blk
+        and Sq == Sk
+    )
+    kv_span = window + blk if skip else Sk
+
+    def body(carry, xs):
+        qblk, off = xs  # (B,blk,Kv,G,hd), scalar
+        if skip:
+            # Only keys in (q_start - window, q_start + blk) can be visible.
+            start = jnp.clip(off - window, 0, Sk - kv_span)
+            kw = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vw = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            j = start + jnp.arange(kv_span)
+        else:
+            kw, vw = k, v
+            j = jnp.arange(Sk)
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kw).astype(jnp.float32) * scale
+        if causal:
+            i = off + jnp.arange(blk)
+            m = j[None, :] <= i[:, None]
+            if window is not None:
+                m = m & (j[None, :] > i[:, None] - window)
+            scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(qblk.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, vw)
+        return carry, out
+
+    _, outs = maybe_unrolled_scan(body, None, (qb, offsets))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H * hd)
+    return out
+
+
+def causal_mask(Sq: int, Sk: int, window: Optional[int] = None) -> jax.Array:
+    """(1, Sq, Sk) boolean; True = attend.  Offset assumes Sq == Sk."""
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(Sk)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None]
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence attention.  Returns (out (B,S,D), kv_cache pieces)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if S > SDPA_BLOCK_Q and S % SDPA_BLOCK_Q == 0:
+        out = _sdpa_blocked(cfg, q, k, v, causal=causal, window=window)
+    else:
+        mask = causal_mask(S, S, window) if causal else None
+        out = _sdpa(cfg, q, k, v, mask)
+    out = out @ p["wo"].astype(x.dtype)
+    # Cache for decode continuation: ring-buffered if windowed.
+    if window is not None and S > window:
+        k_c, v_c = k[:, -window:], v[:, -window:]
+        # Roll so that slot (pos % window) matches the ring-buffer layout.
+        shift = S % window
+        k_c = jnp.roll(k_c, shift, axis=1)
+        v_c = jnp.roll(v_c, shift, axis=1)
+    else:
+        k_c, v_c = k, v
+    return out, {"k": k_c, "v": v_c}
+
+
+def cross_attention_forward(cfg: ModelConfig, p: Dict, x: jax.Array, ctx_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["xwq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k, v = ctx_kv
+    out = _sdpa(cfg, q, k, v, None)
+    return out @ p["xwo"].astype(x.dtype)
+
+
+def encode_cross_kv(cfg: ModelConfig, p: Dict, ctx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, S, _ = ctx.shape
+    Kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (ctx @ p["xwk"].astype(ctx.dtype)).reshape(B, S, Kv, hd)
+    v = (ctx @ p["xwv"].astype(ctx.dtype)).reshape(B, S, Kv, hd)
+    return k, v
+
+
+# -- decode (single new token against a cache) ----------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int, window: Optional[int], dtype) -> Dict[str, jax.Array]:
+    S = min(window, max_seq) if window else max_seq
+    Kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, Kv, hd), dtype),
+        "v": jnp.zeros((batch, S, Kv, hd), dtype),
+    }
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Dict,
+    x: jax.Array,            # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    pos: jax.Array,          # scalar int32: index of the new token
+    *,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x)
+    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_arr, cfg.rope_theta)
+    k = apply_rope(k, pos_arr, cfg.rope_theta)
+    S = cache["k"].shape[1]
+    slot = jnp.mod(pos, S) if window else jnp.minimum(pos, S - 1)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    j = jnp.arange(S)
+    if window:
+        # Ring buffer: once pos >= S every slot holds one of the last S
+        # positions; before that only slots 0..pos are populated.
+        mask = jnp.where(pos < S, j[None, :] <= pos, jnp.ones((1, S), bool))
+    else:
+        mask = j[None, :] <= pos
+    mask = jnp.broadcast_to(mask[:, None, :], (B, 1, S))
+    out = _sdpa(cfg, q, k_cache, v_cache, mask)
+    out = out @ p["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention_decode(cfg: ModelConfig, p: Dict, x: jax.Array, ctx_kv: Tuple[jax.Array, jax.Array]) -> jax.Array:
+    return cross_attention_forward(cfg, p, x, ctx_kv)

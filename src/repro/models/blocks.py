@@ -1,0 +1,150 @@
+"""Residual blocks assembled from the mixers: one init-spec + forward +
+decode-step per block kind ("attn", "local", "rglru", "mlstm", "slstm"),
+plus whisper's encoder/decoder blocks."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec
+from .common import ParamSpec, rms_norm
+
+
+def ffn_spec(cfg: ModelConfig) -> ParamSpec:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ((D, F), ("embed", "ffn"), "normal"),
+        "wu": ((D, F), ("embed", "ffn"), "normal"),
+        "wd": ((F, D), ("ffn", "embed"), "normal"),
+    }
+
+
+def ffn_forward(p: Dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    u = x @ p["wu"].astype(dt)
+    return (jax.nn.silu(h.astype(jnp.float32)).astype(dt) * u) @ p["wd"].astype(dt)
+
+
+# -- block specs -----------------------------------------------------------------
+def block_spec(cfg: ModelConfig, kind: str, cross: bool = False) -> ParamSpec:
+    D = cfg.d_model
+    spec: ParamSpec = {"ln1": ((D,), ("embed",), "ones")}
+    if kind in ("attn", "local"):
+        spec.update(attn.attn_spec(cfg))
+        if cfg.n_experts > 0:
+            spec["ln2"] = ((D,), ("embed",), "ones")
+            spec.update(moe_mod.moe_spec(cfg))
+        elif cfg.d_ff > 0:
+            spec["ln2"] = ((D,), ("embed",), "ones")
+            spec.update(ffn_spec(cfg))
+    elif kind == "rglru":
+        spec.update(rec.rglru_spec(cfg))
+        if cfg.d_ff > 0:
+            spec["ln2"] = ((D,), ("embed",), "ones")
+            spec.update(ffn_spec(cfg))
+    elif kind == "mlstm":
+        spec.update(rec.mlstm_spec(cfg))
+    elif kind == "slstm":
+        spec.update(rec.slstm_spec(cfg))
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cross:
+        spec["ln_x"] = ((D,), ("embed",), "ones")
+        spec.update(attn.attn_spec(cfg, cross=True))
+    return spec
+
+
+def _mix_ffn(cfg: ModelConfig, p: Dict, x: jax.Array, mixed: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Residual-add mixer output, then (Mo)FFN if present.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = x + mixed
+    if "ln2" in p:
+        h = rms_norm(x, p["ln2"])
+        if cfg.n_experts > 0 and "router" in p:
+            f, aux = moe_mod.moe_forward(cfg, p, h)
+        else:
+            f = ffn_forward(p, h)
+        x = x + f
+    return x, aux
+
+
+def block_forward(
+    cfg: ModelConfig,
+    kind: str,
+    p: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Full-sequence pass.  Returns (x, decode_cache, aux_loss)."""
+    h = rms_norm(x, p["ln1"])
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        mixed, cache = attn.attention_forward(
+            cfg, p, h, positions, window=window, causal=causal
+        )
+    elif kind == "rglru":
+        mixed, cache = rec.rglru_forward(cfg, p, h)
+    elif kind == "mlstm":
+        mixed, cache = rec.mlstm_forward(cfg, p, h)
+    elif kind == "slstm":
+        mixed, cache = rec.slstm_forward(cfg, p, h)
+    else:
+        raise ValueError(kind)
+    if cross_kv is not None:
+        x = x + mixed
+        xh = rms_norm(x, p["ln_x"])
+        mixed = attn.cross_attention_forward(cfg, p, xh, cross_kv)
+    x, aux = _mix_ffn(cfg, p, x, mixed)
+    return x, cache, aux
+
+
+def block_init_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int, dtype) -> Dict:
+    if kind == "attn":
+        return attn.init_kv_cache(cfg, batch, max_seq, None, dtype)
+    if kind == "local":
+        return attn.init_kv_cache(cfg, batch, max_seq, cfg.window, dtype)
+    if kind == "rglru":
+        return rec.rglru_init_state(cfg, batch)
+    if kind == "mlstm":
+        return rec.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return rec.slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: Dict,
+    x: jax.Array,           # (B,1,D)
+    cache: Dict,
+    pos: jax.Array,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(x, p["ln1"])
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else None
+        mixed, cache = attn.attention_decode(cfg, p, h, cache, pos, window=window)
+    elif kind == "rglru":
+        mixed, cache = rec.rglru_step(cfg, p, h, cache)
+    elif kind == "mlstm":
+        mixed, cache = rec.mlstm_step(cfg, p, h, cache)
+    elif kind == "slstm":
+        mixed, cache = rec.slstm_step(cfg, p, h, cache)
+    else:
+        raise ValueError(kind)
+    if cross_kv is not None:
+        x = x + mixed
+        xh = rms_norm(x, p["ln_x"])
+        mixed = attn.cross_attention_decode(cfg, p, xh, cross_kv)
+    x, _ = _mix_ffn(cfg, p, x, mixed)
+    return x, cache

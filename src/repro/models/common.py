@@ -1,0 +1,136 @@
+"""Shared model utilities: param specs (single source of truth for shapes,
+logical sharding axes, and init), norms, RoPE, losses, and the scan-unroll
+switch used by the dry-run's cost probes."""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# -- scan unrolling (dry-run cost probes) -----------------------------------------
+# XLA's cost_analysis counts a While body ONCE regardless of trip count, so
+# the roofline probes lower small models with every layer/chunk scan fully
+# unrolled (sLSTM's per-token scan excepted — corrected analytically).
+_UNROLL = threading.local()
+
+
+def force_unroll() -> bool:
+    return getattr(_UNROLL, "on", False)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    prev = force_unroll()
+    _UNROLL.on = True
+    try:
+        yield
+    finally:
+        _UNROLL.on = prev
+
+
+def maybe_unrolled_scan(body, carry, xs, length: Optional[int] = None):
+    """lax.scan that fully unrolls under the probe context."""
+    if force_unroll():
+        n = length
+        if n is None:
+            n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return jax.lax.scan(body, carry, xs, length=length, unroll=max(int(n), 1))
+    return jax.lax.scan(body, carry, xs, length=length)
+
+# -- parameter specs --------------------------------------------------------------
+# A ParamSpec maps param name -> (shape, logical_axes, init).
+# init: "normal" (trunc-normal 0.02), "zeros", "ones", or a float std.
+ParamSpec = Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...], Any]]
+
+
+def init_from_spec(spec: ParamSpec, key: jax.Array, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    out = {}
+    names = sorted(spec)
+    keys = jax.random.split(key, max(len(names), 1))
+    for k, name in zip(keys, names):
+        shape, _axes, init = spec[name]
+        if init == "zeros":
+            out[name] = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            out[name] = jnp.ones(shape, dtype)
+        else:
+            std = 0.02 if init == "normal" else float(init)
+            out[name] = (jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+    return out
+
+
+def axes_from_spec(spec: ParamSpec) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {name: spec[name][1] for name in spec}
+
+
+def stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a scanned 'layers' axis of size n to every param."""
+    return {
+        name: ((n,) + shape, ("layers",) + axes, init)
+        for name, (shape, axes, init) in spec.items()
+    }
+
+
+# -- norms ------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# -- rotary embeddings ---------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]  # (..., S, 1, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- loss ----------------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE.  logits (B,S,V) any float dtype; labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# -- misc ------------------------------------------------------------------------------
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+    )

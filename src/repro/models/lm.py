@@ -1,0 +1,323 @@
+"""The language-model assembly: embeddings → scanned layer groups → head.
+
+Layers are stacked per *pattern position* and iterated with ``jax.lax.scan``
+(MaxText-style), so the HLO contains each distinct block kind once regardless
+of depth — essential for fast multi-pod lowering.  Patterns that do not
+divide n_layers get an explicit unscanned tail.
+
+Supports: decoder-only LMs (dense/MoE/SSM/hybrid), a vision-prefix variant
+(phi-3-vision: precomputed patch embeddings prepended), and encoder-decoder
+(whisper: precomputed mel-frame embeddings through a bidirectional encoder,
+causal decoder with per-layer cross-attention).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import blocks
+from ..placement.constraints import maybe_constrain
+from .common import (
+    ParamSpec,
+    axes_from_spec,
+    cross_entropy,
+    dtype_of,
+    init_from_spec,
+    maybe_unrolled_scan,
+    rms_norm,
+    stack_spec,
+)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)  # "full": save nothing, recompute in backward
+
+
+class Model:
+    """Functional model bound to a ModelConfig.  Params are plain pytrees."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = dtype_of(cfg.dtype)
+        self.pdtype = dtype_of(cfg.param_dtype)
+        P = len(cfg.pattern)
+        self.n_groups = cfg.n_layers // P
+        self.tail_kinds = cfg.layer_kinds()[self.n_groups * P :]
+
+    # -- parameter construction ----------------------------------------------------
+    def _group_specs(self) -> Dict[str, ParamSpec]:
+        cfg = self.cfg
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            out[f"blk{i}_{kind}"] = blocks.block_spec(cfg, kind, cross=cfg.enc_dec)
+        return out
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab
+        specs: Dict[str, Any] = {
+            "embed": {"table": ((V, D), ("vocab", "embed"), "normal")},
+            "final_norm": {"w": ((D,), ("embed",), "ones")},
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = {"w": ((D, V), ("embed", "vocab"), "normal")}
+        specs["groups"] = {
+            name: stack_spec(spec, self.n_groups)
+            for name, spec in self._group_specs().items()
+        }
+        specs["tail"] = {
+            f"tail{i}_{kind}": blocks.block_spec(cfg, kind, cross=cfg.enc_dec)
+            for i, kind in enumerate(self.tail_kinds)
+        }
+        if cfg.enc_dec:
+            specs["enc_groups"] = {
+                "enc_attn": stack_spec(
+                    blocks.block_spec(cfg, "attn"), cfg.n_enc_layers
+                )
+            }
+            specs["enc_norm"] = {"w": ((D,), ("embed",), "ones")}
+            specs["frontend"] = {"w": ((D, D), ("embed", "embed"), "normal")}
+        if cfg.vision_prefix > 0:
+            specs["vision_adapter"] = {"w": ((D, D), ("embed", "embed"), "normal")}
+        return specs
+
+    def init_params(self, key: jax.Array):
+        def init_tree(spec_tree, key):
+            if isinstance(spec_tree, dict) and spec_tree and isinstance(
+                next(iter(spec_tree.values())), tuple
+            ):
+                return init_from_spec(spec_tree, key, self.pdtype)
+            keys = jax.random.split(key, max(len(spec_tree), 1))
+            return {
+                name: init_tree(sub, k)
+                for (name, sub), k in zip(sorted(spec_tree.items()), keys)
+            }
+
+        return init_tree(self.param_specs(), key)
+
+    def param_axes(self):
+        def axes_tree(spec_tree):
+            if isinstance(spec_tree, dict) and spec_tree and isinstance(
+                next(iter(spec_tree.values())), tuple
+            ):
+                return axes_from_spec(spec_tree)
+            return {name: axes_tree(sub) for name, sub in spec_tree.items()}
+
+        return axes_tree(self.param_specs())
+
+    # -- embedding / head -----------------------------------------------------------
+    def embed(self, params, tokens: jax.Array) -> jax.Array:
+        return params["embed"]["table"].astype(self.dtype)[tokens]
+
+    def unembed(self, params, x: jax.Array) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            w = params["embed"]["table"].astype(self.dtype).T
+        else:
+            w = params["unembed"]["w"].astype(self.dtype)
+        return x @ w
+
+    # -- encoder (whisper) ------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: precomputed mel-frame embeddings (B, enc_seq, D) — the conv
+        frontend is a stub per the assignment; a linear adapter stands in."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype) @ params["frontend"]["w"].astype(self.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        def body(x, p):
+            x, _, _ = blocks.block_forward(cfg, "attn", p, x, positions, causal=False)
+            return x, None
+
+        x, _ = maybe_unrolled_scan(_remat(cfg, body), x, params["enc_groups"]["enc_attn"])
+        return rms_norm(x, params["enc_norm"]["w"])
+
+    # -- full forward (train / prefill) -------------------------------------------------
+    def forward(
+        self, params, batch: Dict[str, jax.Array], collect_cache: bool = False
+    ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+        """Returns (logits, aux_loss, cache-or-None)."""
+        return self._forward_impl(params, batch, collect_cache, unembed=True)
+
+    def _forward_impl(
+        self,
+        params,
+        batch: Dict[str, jax.Array],
+        collect_cache: bool = False,
+        unembed: bool = True,
+    ) -> Tuple[jax.Array, jax.Array, Optional[Dict]]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self.embed(params, tokens)
+        prefix = 0
+        if cfg.vision_prefix > 0:
+            patches = batch["patches"].astype(self.dtype)
+            patches = patches @ params["vision_adapter"]["w"].astype(self.dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix = patches.shape[1]
+        total = prefix + S
+        positions = jnp.broadcast_to(jnp.arange(total)[None], (B, total))
+        enc_out = None
+        if cfg.enc_dec:
+            enc_out = self.encode(params, batch["frames"])
+
+        def group_body(carry, gp):
+            x, aux = carry
+            x = maybe_constrain("residual", x)
+            caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                p = gp[f"blk{i}_{kind}"]
+                ckv = (
+                    attn_mod.encode_cross_kv(cfg, p, enc_out)
+                    if enc_out is not None
+                    else None
+                )
+                x, cache, a = blocks.block_forward(
+                    cfg, kind, p, x, positions, cross_kv=ckv
+                )
+                caches[f"blk{i}_{kind}"] = cache
+                aux = aux + a
+            return (x, aux), caches if collect_cache else None
+
+        (x, aux), group_caches = maybe_unrolled_scan(
+            _remat(cfg, group_body),
+            (x, jnp.zeros((), jnp.float32)),
+            params["groups"],
+        )
+        tail_caches = {}
+        for i, kind in enumerate(self.tail_kinds):
+            p = params["tail"][f"tail{i}_{kind}"]
+            ckv = attn_mod.encode_cross_kv(cfg, p, enc_out) if enc_out is not None else None
+            x, cache, a = blocks.block_forward(cfg, kind, p, x, positions, cross_kv=ckv)
+            tail_caches[f"tail{i}_{kind}"] = cache
+            aux = aux + a
+        x = rms_norm(x, params["final_norm"]["w"])
+        if prefix:
+            x = x[:, prefix:]
+        out = self.unembed(params, x) if unembed else x
+        cache = None
+        if collect_cache:
+            cache = {"groups": group_caches, "tail": tail_caches}
+            if enc_out is not None:
+                cache["enc_out"] = enc_out
+        return out, aux, cache
+
+    # -- hidden-state forward (for the chunked-CE loss path) -------------------------------
+    def forward_hidden(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+        """Like forward() but stops before unembedding: (hidden (B,S,D), aux)."""
+        hidden, aux, _ = self._forward_impl(params, batch, collect_cache=False, unembed=False)
+        return hidden, aux
+
+    # -- losses ---------------------------------------------------------------------------
+    CE_CHUNK = 512
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        if S < 2 * self.CE_CHUNK:
+            logits, aux, _ = self.forward(params, batch)
+            ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        else:
+            # Chunked cross-entropy: never materialize the full (B,S,V) f32
+            # logits — each S-chunk's logits are (re)computed under remat.
+            hidden, aux = self.forward_hidden(params, batch)
+            if self.cfg.tie_embeddings:
+                w = params["embed"]["table"].astype(self.dtype).T
+            else:
+                w = params["unembed"]["w"].astype(self.dtype)
+            n_chunks = S // self.CE_CHUNK
+            hs = hidden.reshape(B, n_chunks, self.CE_CHUNK, -1).transpose(1, 0, 2, 3)
+            ls = batch["labels"].reshape(B, n_chunks, self.CE_CHUNK).transpose(1, 0, 2)
+
+            @jax.checkpoint
+            def chunk_ce(carry, xs):
+                h, lab = xs
+                logits = maybe_constrain("logits", h @ w)
+                return carry + cross_entropy(logits, lab) * lab.size, None
+
+            total, _ = maybe_unrolled_scan(chunk_ce, jnp.zeros((), jnp.float32), (hs, ls))
+            ce = total / (B * n_chunks * self.CE_CHUNK)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- decode -----------------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict:
+        cfg = self.cfg
+        grp = {}
+        for i, kind in enumerate(cfg.pattern):
+            one = blocks.block_init_cache(cfg, kind, batch, max_seq, self.dtype)
+            grp[f"blk{i}_{kind}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (self.n_groups,) + a.shape), one
+            )
+        tail = {
+            f"tail{i}_{kind}": blocks.block_init_cache(cfg, kind, batch, max_seq, self.dtype)
+            for i, kind in enumerate(self.tail_kinds)
+        }
+        cache: Dict[str, Any] = {"groups": grp, "tail": tail}
+        if cfg.enc_dec:
+            cache["enc_out"] = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), self.dtype)
+        return cache
+
+    def decode_step(
+        self, params, cache: Dict, token: jax.Array, pos: jax.Array
+    ) -> Tuple[jax.Array, Dict]:
+        """One token for the whole batch.  token (B,1) int32, pos scalar."""
+        cfg = self.cfg
+        x = self.embed(params, token)
+        enc_out = cache.get("enc_out")
+
+        def group_body(x, scanned):
+            gp, gcache = scanned
+            new_caches = {}
+            for i, kind in enumerate(cfg.pattern):
+                key = f"blk{i}_{kind}"
+                p = gp[key]
+                ckv = (
+                    attn_mod.encode_cross_kv(cfg, p, enc_out)
+                    if enc_out is not None
+                    else None
+                )
+                x, nc = blocks.block_decode(cfg, kind, p, x, gcache[key], pos, cross_kv=ckv)
+                new_caches[key] = nc
+            return x, new_caches
+
+        x, new_group_caches = maybe_unrolled_scan(
+            group_body, x, (params["groups"], cache["groups"])
+        )
+        new_tail = {}
+        for i, kind in enumerate(self.tail_kinds):
+            key = f"tail{i}_{kind}"
+            p = params["tail"][key]
+            ckv = attn_mod.encode_cross_kv(cfg, p, enc_out) if enc_out is not None else None
+            x, nc = blocks.block_decode(cfg, kind, p, x, cache["tail"][key], pos, cross_kv=ckv)
+            new_tail[key] = nc
+        x = rms_norm(x, params["final_norm"]["w"])
+        logits = self.unembed(params, x)
+        new_cache: Dict[str, Any] = {"groups": new_group_caches, "tail": new_tail}
+        if enc_out is not None:
+            new_cache["enc_out"] = enc_out
+        return logits, new_cache
+
+    # -- prefill -------------------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        """Returns (last-position logits (B,1,V), decode cache).  Only the
+        final position is unembedded — the full (B,S,V) logits tensor is
+        never materialized."""
+        hidden, _aux, cache = self._forward_impl(
+            params, batch, collect_cache=True, unembed=False
+        )
+        logits = self.unembed(params, hidden[:, -1:])
+        return logits, cache

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dispatch into
+capacity-bounded grouped GEMMs (GShard-style with token dropping).
+
+TPU adaptation: tokens are sorted by expert id and packed into an
+(E, capacity, D) buffer so the expert FFN is a single grouped einsum on the
+MXU; with experts sharded over the "model" axis the gather/scatter lowers to
+the expected all-to-all pattern.  The Pallas grouped-GEMM kernel in
+``repro.kernels`` accelerates the (E,C,D)x(E,D,F) contraction on real TPUs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamSpec
+from ..placement.constraints import maybe_constrain
+
+
+def moe_spec(cfg: ModelConfig) -> ParamSpec:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ((D, E), ("embed", "experts"), "normal"),
+        "wi": ((E, D, F), ("experts", "embed", "ffn"), "normal"),
+        "wu": ((E, D, F), ("experts", "embed", "ffn"), "normal"),
+        "wd": ((E, F, D), ("experts", "ffn", "embed"), "normal"),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)  # pad to a multiple of 8 lanes
+
+
+def grouped_dispatch_enabled() -> bool:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf): dispatch per batch
+    row (GShard 'groups') so the token sort/scatter is local to each data
+    shard — the global-argsort path forces GSPMD to all-gather the full
+    (T·K, D) dispatch tensor onto every device.  Off by default (baseline)."""
+    import os
+
+    return os.environ.get("REPRO_OPT_MOE_GROUPED", "0") == "1"
+
+
+def moe_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    if grouped_dispatch_enabled() and x.shape[0] > 1:
+        return moe_forward_grouped(cfg, p, x)
+    return moe_forward_global(cfg, p, x)
+
+
+def moe_forward_global(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Sort-based dispatch: flatten (T = B*S) tokens, expand to T*K slots,
+    sort slots by expert, keep the first `capacity` per expert.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = moe_capacity(cfg, T)
+    dt = x.dtype
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"].astype(dt)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch-style).
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # Sort T*K slots by expert id; position within expert via cumsum.
+    flat_expert = expert_idx.reshape(-1)                      # (T*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank within expert = index - start offset of that expert's run
+    counts = jnp.zeros((E,), jnp.int32).at[sorted_expert].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * K) - starts[sorted_expert]
+    keep = rank < C  # token-dropping beyond capacity
+    slot = sorted_expert * C + jnp.where(keep, rank, 0)
+
+    # Dispatch: (E*C, D) buffer.
+    buf = jnp.zeros((E * C, D), dt)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xf[sorted_token], 0).astype(dt))
+    xe = maybe_constrain("moe_buffer", buf.reshape(E, C, D))
+
+    # Grouped expert FFN (SwiGLU).
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"].astype(dt))
+    y = (jax.nn.silu(h.astype(jnp.float32)).astype(dt) * u)
+    ye = jnp.einsum("ecf,efd->ecd", y, p["wd"].astype(dt)).reshape(E * C, D)
+
+    # Combine: gather back and weight by gates.
+    gathered = ye[slot] * jnp.where(keep, sorted_gate, 0.0)[:, None].astype(dt)
+    out = jnp.zeros((T, D), dt).at[sorted_token].add(gathered)
+    return out.reshape(B, S, D), aux
+
+
+def moe_forward_grouped(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Grouped (per-batch-row) dispatch: sort/scatter stays local to the data
+    shard holding the row, so no global gather of the dispatch tensor; the
+    only cross-device traffic left is the expert-sharded GEMM's gather of
+    (E/model_shards) buffer slices — the GShard group-local pattern."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = moe_capacity(cfg, S)  # capacity per row
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=(0, 1))
+    ce = (
+        jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+        / (B * S * K)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    flat_expert = expert_idx.reshape(B, S * K)                  # per-row slots
+    flat_gate = gate_vals.reshape(B, S * K)
+    flat_token = jnp.broadcast_to(jnp.repeat(jnp.arange(S), K)[None], (B, S * K))
+
+    def row_dispatch(xf, fe, ft, fg):
+        order = jnp.argsort(fe, stable=True)
+        se, st, sg = fe[order], ft[order], fg[order]
+        counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(S * K) - starts[se]
+        keep = rank < C
+        slot = se * C + jnp.where(keep, rank, 0)
+        buf = jnp.zeros((E * C, D), dt)
+        buf = buf.at[slot].add(jnp.where(keep[:, None], xf[st], 0).astype(dt))
+        return buf.reshape(E, C, D), (slot, st, sg, keep)
+
+    xe, (slot, st, sg, keep) = jax.vmap(row_dispatch)(
+        x, flat_expert, flat_token, flat_gate
+    )                                                            # (B,E,C,D)
+    # §Perf MoE iter 4: stage the shardings — keep the scatter local to the
+    # row's data shard (batch-only sharding), then *slice* to the expert-
+    # sharded layout for the GEMM (no communication), instead of letting the
+    # E-sharding propagate backward into the scatter (which GSPMD resolves
+    # by replicating the whole buffer).
+    xe = maybe_constrain("moe_buffer_local", xe)
+    xe = maybe_constrain("moe_buffer_grouped", xe)
+
+    h = jnp.einsum("becd,edf->becf", xe, p["wi"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", xe, p["wu"].astype(dt))
+    y = jax.nn.silu(h.astype(jnp.float32)).astype(dt) * u
+    ye = jnp.einsum("becf,efd->becd", y, p["wd"].astype(dt)).reshape(B, E * C, D)
+    # §Perf MoE iter 4 (second half): bring expert outputs back to batch-only
+    # sharding ONCE (one all-gather over the model axis), so the combine
+    # gather below is row-local.  (Iter 2's fully-token-sharded variant is
+    # REFUTED — it made GSPMD replicate upstream tensors.)
+    ye = maybe_constrain("moe_ye_local", ye)
+
+    def row_combine(ye_row, slot_row, st_row, sg_row, keep_row):
+        gathered = ye_row[slot_row] * jnp.where(keep_row, sg_row, 0.0)[:, None].astype(dt)
+        return jnp.zeros((S, D), dt).at[st_row].add(gathered)
+
+    out = jax.vmap(row_combine)(ye, slot, st, sg, keep)
+    return out, aux

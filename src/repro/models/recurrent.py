@@ -1,0 +1,308 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma), chunkwise
+mLSTM and sLSTM (xLSTM).  Each provides a forward (full-sequence, training/
+prefill) and a step (single-token decode) path plus state initializers.
+
+TPU adaptation notes (DESIGN.md §2.3): RG-LRU's diagonal linear recurrence is
+computed with ``jax.lax.associative_scan`` (log-depth on the MXU-adjacent
+VPU), mLSTM uses the chunkwise formulation (intra-chunk quadratic on the MXU,
+inter-chunk state passing) rather than a step loop, and sLSTM — strictly
+sequential by construction — is a ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import ParamSpec, maybe_unrolled_scan, rms_norm
+
+# =====================================================================================
+# RG-LRU (Real-Gated Linear Recurrent Unit) — arXiv:2402.19427 §2.4
+# =====================================================================================
+_RGLRU_C = 8.0
+
+
+def rglru_spec(cfg: ModelConfig) -> ParamSpec:
+    D = cfg.d_model
+    return {
+        "w_in_x": ((D, D), ("embed", "ffn_in"), "normal"),
+        "w_in_gate": ((D, D), ("embed", "ffn_in"), "normal"),
+        "conv_w": ((4, D), (None, "ffn_in"), "normal"),
+        "conv_b": ((D,), ("ffn_in",), "zeros"),
+        "w_rec_gate": ((D, D), ("embed", "ffn_in"), "normal"),
+        "b_rec_gate": ((D,), ("ffn_in",), "zeros"),
+        "w_inp_gate": ((D, D), ("embed", "ffn_in"), "normal"),
+        "b_inp_gate": ((D,), ("ffn_in",), "zeros"),
+        "lambda_p": ((D,), ("ffn_in",), 1.0),
+        "w_out": ((D, D), ("ffn_in", "embed"), "normal"),
+    }
+
+
+def _rglru_gates(p: Dict, xb: jax.Array, x_raw: jax.Array):
+    """a (recurrence weight in (0,1)) and gated input, per channel."""
+    dt = xb.dtype
+    r = jax.nn.sigmoid(
+        (x_raw @ p["w_rec_gate"].astype(dt)).astype(jnp.float32)
+        + p["b_rec_gate"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        (x_raw @ p["w_inp_gate"].astype(dt)).astype(jnp.float32)
+        + p["b_inp_gate"].astype(jnp.float32)
+    )
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xb.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def _causal_conv4(p: Dict, x: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv, width 4.  x (B,S,D); state (B,3,D) carries the
+    last 3 inputs for decode."""
+    if state is not None:
+        x_ext = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        x_ext = jnp.pad(x, ((0, 0), (3, 0), (0, 0)))
+    w = p["conv_w"].astype(x.dtype)
+    out = sum(x_ext[:, i : i + x.shape[1]] * w[i] for i in range(4))
+    return out + p["conv_b"].astype(x.dtype), x_ext[:, -3:]
+
+
+def rglru_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Griffin recurrent block: in-proj pair, conv4, RG-LRU scan, GeLU gate,
+    out-proj.  Returns (out, decode_state)."""
+    dt = x.dtype
+    xb = x @ p["w_in_x"].astype(dt)
+    gate = jax.nn.gelu((x @ p["w_in_gate"].astype(dt)).astype(jnp.float32))
+    xb, conv_state = _causal_conv4(p, xb)
+    a, gated = _rglru_gates(p, xb, x)
+    # h_t = a_t * h_{t-1} + gated_t — associative scan over time.
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    out = (h * gate).astype(dt) @ p["w_out"].astype(dt)
+    state = {"h": h[:, -1], "conv": conv_state}
+    return out, state
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    D = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, D), jnp.float32),
+        "conv": jnp.zeros((batch, 3, D), jnp.float32),
+    }
+
+
+def rglru_step(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x (B,1,D) single token."""
+    dt = x.dtype
+    xb = x @ p["w_in_x"].astype(dt)
+    gate = jax.nn.gelu((x @ p["w_in_gate"].astype(dt)).astype(jnp.float32))
+    xb, conv_state = _causal_conv4(p, xb, state["conv"])
+    a, gated = _rglru_gates(p, xb, x)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    out = (h[:, None] * gate).astype(dt) @ p["w_out"].astype(dt)
+    return out, {"h": h, "conv": conv_state}
+
+
+# =====================================================================================
+# mLSTM (matrix-memory LSTM) — arXiv:2405.04517 §2.3, chunkwise form
+# =====================================================================================
+def mlstm_spec(cfg: ModelConfig) -> ParamSpec:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": ((D, H * hd), ("embed", "q_heads"), "normal"),
+        "wk": ((D, H * hd), ("embed", "q_heads"), "normal"),
+        "wv": ((D, H * hd), ("embed", "q_heads"), "normal"),
+        "w_igate": ((D, H), ("embed", None), "normal"),
+        "b_igate": ((H,), (None,), "zeros"),
+        "w_fgate": ((D, H), ("embed", None), "normal"),
+        "b_fgate": ((H,), (None,), "zeros"),
+        "out_norm": ((H * hd,), ("q_heads",), "ones"),
+        "wo": ((H * hd, D), ("q_heads", "embed"), "normal"),
+    }
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_qkv_gates(cfg: ModelConfig, p: Dict, x: jax.Array):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k / jnp.sqrt(jnp.array(hd, dt))
+    log_i = (x @ p["w_igate"].astype(dt)).astype(jnp.float32) + p["b_igate"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (x @ p["w_fgate"].astype(dt)).astype(jnp.float32) + p["b_fgate"].astype(jnp.float32)
+    )
+    # (B,H,S)
+    return q, k, v, log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1)
+
+
+def mlstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Chunkwise-parallel mLSTM.  Returns (out, decode_state)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x)
+    L = min(MLSTM_CHUNK, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    N = S // L
+
+    def resh(t):  # (B,H,S,...) -> (N,B,H,L,...)
+        return t.reshape(B, H, N, L, *t.shape[3:]).transpose(2, 0, 1, 3, *range(4, t.ndim + 1))
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    lis = log_i.reshape(B, H, N, L).transpose(2, 0, 1, 3)
+    lfs = log_f.reshape(B, H, N, L).transpose(2, 0, 1, 3)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def chunk_body(carry, inp):
+        C, n, m = carry  # C,n stored relative to exp(m)
+        qc, kc, vc, li, lf = inp  # (B,H,L,hd)... li/lf (B,H,L)
+        b = jnp.cumsum(lf, axis=-1)  # (B,H,L) within-chunk cumulative log f
+        total = b[..., -1:]
+        # decay from chunk start to position t (inclusive of gates ≤ t).
+        m_inter = m[..., None] + b  # (B,H,L)
+        # intra-chunk weights: D_ts = b_t − b_s + li_s for s ≤ t
+        dmat = b[..., :, None] - b[..., None, :] + li[..., None, :]  # (B,H,L,L)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=-1)  # (B,H,L)
+        m_new = jnp.maximum(m_inter, m_intra)
+        w_intra = jnp.exp(dmat - m_new[..., None])  # (B,H,L,L)
+        scale_inter = jnp.exp(m_inter - m_new)  # (B,H,L)
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        scores = jnp.einsum("bhld,bhsd->bhls", qf, kf) * w_intra
+        num = jnp.einsum("bhls,bhsd->bhld", scores, vf) + scale_inter[..., None] * jnp.einsum(
+            "bhld,bhde->bhle", qf, C
+        )
+        den = jnp.sum(scores, axis=-1) + scale_inter * jnp.einsum("bhld,bhd->bhl", qf, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        # state update to end of chunk
+        m_state_intra = jnp.max(total - b + li, axis=-1)  # (B,H)
+        m_next = jnp.maximum(m + total[..., 0], m_state_intra)
+        decay_old = jnp.exp(m + total[..., 0] - m_next)  # (B,H)
+        w_state = jnp.exp(total - b + li - m_next[..., None])  # (B,H,L)
+        C_next = decay_old[..., None, None] * C + jnp.einsum(
+            "bhl,bhld,bhle->bhde", w_state, kf, vf
+        )
+        n_next = decay_old[..., None] * n + jnp.einsum("bhl,bhld->bhd", w_state, kf)
+        return (C_next, n_next, m_next), h
+
+    (C, n, m), hs = maybe_unrolled_scan(chunk_body, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    h = rms_norm(h.astype(x.dtype), p["out_norm"])
+    out = h @ p["wo"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    """x (B,1,D)."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(cfg, p, x)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]  # (B,H,hd)
+    li, lf = log_i[..., 0], log_f[..., 0]  # (B,H)
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    f_w = jnp.exp(lf + m - m_new)
+    i_w = jnp.exp(li - m_new)
+    kf, vf, qf = k.astype(jnp.float32), v.astype(jnp.float32), q.astype(jnp.float32)
+    C = f_w[..., None, None] * C + i_w[..., None, None] * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = f_w[..., None] * n + i_w[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.einsum("bhd,bhd->bh", qf, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, H * hd).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    out = h @ p["wo"].astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# =====================================================================================
+# sLSTM (scalar-memory, exponential gating) — arXiv:2405.04517 §2.2
+# =====================================================================================
+def slstm_spec(cfg: ModelConfig) -> ParamSpec:
+    D = cfg.d_model
+    return {
+        "w_gates": ((D, 4 * D), ("embed", "ffn_in"), "normal"),
+        "r_gates": ((D, 4 * D), ("embed", "ffn_in"), 0.02),
+        "b_gates": ((4 * D,), ("ffn_in",), "zeros"),
+        "wo": ((D, D), ("ffn_in", "embed"), "normal"),
+    }
+
+
+def _slstm_cell(p, xg, h, c, n, m):
+    """One step.  xg (B,4D) precomputed input contribution."""
+    D = h.shape[-1]
+    g = xg + h @ p["r_gates"].astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    m_new = jnp.maximum(fi + m, ii)
+    i_w = jnp.exp(ii - m_new)
+    f_w = jnp.exp(fi + m - m_new)
+    c_new = f_w * c + i_w * z
+    n_new = f_w * n + i_w
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(cfg: ModelConfig, p: Dict, x: jax.Array) -> Tuple[jax.Array, Dict]:
+    B, S, D = x.shape
+    xg = (x.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)) + p["b_gates"].astype(
+        jnp.float32
+    )
+    h0 = jnp.zeros((B, D), jnp.float32)
+    c0 = jnp.zeros((B, D), jnp.float32)
+    n0 = jnp.zeros((B, D), jnp.float32)
+    m0 = jnp.full((B, D), -1e30, jnp.float32)
+
+    def body(carry, xg_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, xg_t, h, c, n, m)
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(body, (h0, c0, n0, m0), xg.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, {"h": h, "c": c, "n": n, "m": m}
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> Dict:
+    D = cfg.d_model
+    z = lambda: jnp.zeros((batch, D), jnp.float32)  # noqa: E731
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, D), -1e30, jnp.float32)}
+
+
+def slstm_step(cfg: ModelConfig, p: Dict, x: jax.Array, state: Dict) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    xg = (x[:, 0].astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)) + p[
+        "b_gates"
+    ].astype(jnp.float32)
+    h, c, n, m = _slstm_cell(p, xg, state["h"], state["c"], state["n"], state["m"])
+    out = h[:, None].astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, {"h": h, "c": c, "n": n, "m": m}

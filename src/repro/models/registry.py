@@ -1,0 +1,119 @@
+"""Arch registry: build models, input specs per (arch × shape) cell, and the
+skip rules for cells that are undefined for a family (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..configs.base import ModelConfig, ShapeCell, shape_by_name
+from .common import dtype_of
+from .lm import Model
+
+
+def build(arch: str, smoke: bool = False) -> Model:
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    return Model(cfg)
+
+
+def build_from_config(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# -- cell applicability ---------------------------------------------------------------
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeCell) -> Optional[str]:
+    """None if the (arch, shape) cell runs; otherwise the documented reason."""
+    if shape.name == "long_500k":
+        kinds = set(cfg.layer_kinds())
+        sub_quadratic = kinds <= {"local", "rglru", "mlstm", "slstm"} or (
+            "attn" not in kinds
+        )
+        if not sub_quadratic:
+            return (
+                "long_500k skipped: pure full-attention arch cannot hold a "
+                "524k dense KV cache sub-quadratically (DESIGN.md §4)"
+            )
+    return None
+
+
+# -- input specs (ShapeDtypeStruct stand-ins; no allocation) ------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """Model inputs for one cell.  For decode cells this includes the KV/state
+    cache stand-ins (built via eval_shape of init_cache — no allocation)."""
+    model = Model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        _add_frontends(cfg, batch, B)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        _add_frontends(cfg, batch, B)
+        return {"batch": batch}
+    # decode: one new token against a cache of S positions.
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    return {
+        "cache": cache_shapes,
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def _add_frontends(cfg: ModelConfig, batch: Dict[str, Any], B: int) -> None:
+    dt = dtype_of(cfg.dtype)
+    if cfg.vision_prefix > 0:
+        batch["patches"] = _sds((B, cfg.vision_prefix, cfg.d_model), dt)
+    if cfg.enc_dec:
+        batch["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), dt)
+
+
+# -- decode-cache continuation helper (prefill cache -> larger decode buffer) --------------
+def extend_cache(model: Model, cache: Dict, max_seq: int) -> Dict:
+    """Pad attention KV buffers (length-S) up to ``max_seq`` so decoding can
+    continue past the prefill length.  Recurrent states are size-invariant."""
+    cfg = model.cfg
+
+    def pad_kv(leaf, axis, target):
+        if leaf.shape[axis] >= target:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[axis] = (0, target - leaf.shape[axis])
+        return jnp.pad(leaf, pad)
+
+    out = {"groups": {}, "tail": {}}
+    for i, kind in enumerate(cfg.pattern):
+        key = f"blk{i}_{kind}"
+        sub = cache["groups"][key]
+        if kind == "attn":
+            out["groups"][key] = {k: pad_kv(v, 2, max_seq) for k, v in sub.items()}
+        elif kind == "local":
+            out["groups"][key] = {
+                k: pad_kv(v, 2, min(cfg.window, max_seq)) for k, v in sub.items()
+            }
+        else:
+            out["groups"][key] = sub
+    for i, kind in enumerate(model.tail_kinds):
+        key = f"tail{i}_{kind}"
+        sub = cache["tail"][key]
+        if kind == "attn":
+            out["tail"][key] = {k: pad_kv(v, 1, max_seq) for k, v in sub.items()}
+        elif kind == "local":
+            out["tail"][key] = {
+                k: pad_kv(v, 1, min(cfg.window, max_seq)) for k, v in sub.items()
+            }
+        else:
+            out["tail"][key] = sub
+    if "enc_out" in cache:
+        out["enc_out"] = cache["enc_out"]
+    return out

@@ -1,0 +1,28 @@
+from .constraints import activation_rules, maybe_constrain
+from .hardware import V5E, ChipSpec
+from .memory_model import MemoryEstimate, estimate_decode, estimate_prefill, estimate_train
+from .planner import (
+    InfeasiblePlanError,
+    Plan,
+    ResourceAwarePlanner,
+    plan_expert_placement,
+    round_robin_expert_placement,
+)
+from .sharding_rules import MeshShape
+
+__all__ = [
+    "activation_rules",
+    "maybe_constrain",
+    "V5E",
+    "ChipSpec",
+    "MemoryEstimate",
+    "estimate_train",
+    "estimate_prefill",
+    "estimate_decode",
+    "InfeasiblePlanError",
+    "Plan",
+    "ResourceAwarePlanner",
+    "plan_expert_placement",
+    "round_robin_expert_placement",
+    "MeshShape",
+]

@@ -1,0 +1,45 @@
+"""Named activation-sharding constraints (MaxText-style logical rules).
+
+The planner installs a rule table; model code marks key intermediates with
+``maybe_constrain(name, x)``.  Outside a planned context the call is a no-op,
+so smoke tests and single-device runs are unaffected.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, PartitionSpec]]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: Dict[str, PartitionSpec]):
+    prev = current_rules()
+    _STATE.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def maybe_constrain(name: str, x: jax.Array) -> jax.Array:
+    rules = current_rules()
+    if not rules or name not in rules:
+        return x
+    spec = rules[name]
+    if len(spec) != x.ndim:
+        # Rank mismatch (e.g. smoke config): skip rather than fail.
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

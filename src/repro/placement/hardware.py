@@ -1,0 +1,24 @@
+"""Target-hardware constants (TPU v5e, per the assignment)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12        # FLOP/s per chip
+    hbm_bytes: float = 16 * 1024**3        # 16 GiB
+    hbm_bw: float = 819e9                  # bytes/s
+    ici_bw_per_link: float = 50e9          # bytes/s per link
+    ici_links: int = 4
+    # Usable fraction of HBM after runtime/framework reservations.
+    hbm_usable_fraction: float = 0.90
+
+    @property
+    def hbm_usable(self) -> float:
+        return self.hbm_bytes * self.hbm_usable_fraction
+
+
+V5E = ChipSpec()

@@ -1,0 +1,152 @@
+"""Per-device HBM accounting — the planner's *hard constraint* (paper: memory
+must never be over-subscribed; an OOM on a TPU is as catastrophic as the
+paper's swap-thrash).  The authoritative check is the dry-run compile's
+``memory_analysis()``; this analytic model drives the planner's escalation
+(TP → TP+ZeRO) before compiling."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from ..configs.base import ModelConfig, ShapeCell
+from .hardware import ChipSpec, V5E
+from .sharding_rules import MeshShape
+
+
+def _shards_of(spec: PartitionSpec, mesh: MeshShape) -> int:
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            n *= mesh.size(a)
+    return n
+
+
+def bytes_per_device(shapes_tree, specs_tree, mesh: MeshShape) -> float:
+    """Σ leaf bytes / shards, for a pytree of ShapeDtypeStructs + specs."""
+    leaves, _ = jax.tree_util.tree_flatten(shapes_tree)
+    spec_leaves, _ = jax.tree_util.tree_flatten(
+        specs_tree, is_leaf=lambda x: isinstance(x, PartitionSpec)
+    )
+    assert len(leaves) == len(spec_leaves), (len(leaves), len(spec_leaves))
+    total = 0.0
+    for leaf, spec in zip(leaves, spec_leaves):
+        size = float(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        total += size / _shards_of(spec, mesh)
+    return total
+
+
+@dataclasses.dataclass
+class MemoryEstimate:
+    params: float
+    opt_state: float
+    grads: float
+    activations: float
+    cache: float
+    total: float
+    hbm_usable: float
+
+    @property
+    def fits(self) -> bool:
+        return self.total <= self.hbm_usable
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+CE_CHUNK = 512        # models.lm.Model.CE_CHUNK
+SDPA_BLOCK_Q = 512    # models.attention.SDPA_BLOCK_Q
+
+
+def estimate_train(
+    cfg: ModelConfig,
+    shape: ShapeCell,
+    param_shapes,
+    param_specs,
+    mesh: MeshShape,
+    chip: ChipSpec = V5E,
+    n_micro: int = 1,
+) -> MemoryEstimate:
+    p_bytes = bytes_per_device(param_shapes, param_specs, mesh)
+    opt_bytes = 2.0 * p_bytes              # adam m, v (same sharding)
+    grad_bytes = p_bytes                   # accumulator (param sharding)
+    dp = 1
+    for a in mesh.data_axes:
+        dp *= mesh.size(a)
+    B, S = shape.global_batch, shape.seq_len
+    Bm = max(B // n_micro, 1)
+    D, V, H = cfg.d_model, cfg.vocab, cfg.n_heads
+    L = cfg.n_layers
+    bdev = max(Bm / dp, 1.0)               # per-device microbatch rows
+    # Per-layer checkpointed residual carries (bf16) under full remat.
+    act = 2.0 * L * bdev * S * D * 2
+    # Chunked-CE logits transient: (Bm, CE_CHUNK, V) fp32 ×2 (value+grad).
+    act += bdev * CE_CHUNK * (V / max(mesh.size("model"), 1)) * 4 * 2
+    # Blocked-attention score transient: (Bm, H, BLOCK_Q, S) fp32.
+    act += bdev * H * SDPA_BLOCK_Q * min(S, 64 * 1024) * 4
+    if cfg.n_experts:
+        T = Bm * S
+        C = max(8, int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+        if cfg.n_experts % mesh.size("model") == 0:
+            moe_shards = mesh.size("model") * dp
+        else:
+            moe_shards = dp
+        act += 2.0 * cfg.n_experts * C * D * 2 / moe_shards
+    total = p_bytes + opt_bytes + grad_bytes + act
+    return MemoryEstimate(p_bytes, opt_bytes, grad_bytes, act, 0.0, total, chip.hbm_usable)
+
+
+def estimate_prefill(
+    cfg: ModelConfig,
+    shape: ShapeCell,
+    param_shapes,
+    param_specs,
+    cache_shapes,
+    cache_specs,
+    mesh: MeshShape,
+    chip: ChipSpec = V5E,
+) -> MemoryEstimate:
+    """Prefill is inference: bf16 weights, no grads/opt, no checkpointed
+    carries — the dominant terms are the emitted KV cache and the blocked-
+    attention transient."""
+    p_bytes = 0.5 * bytes_per_device(param_shapes, param_specs, mesh)
+    c_bytes = bytes_per_device(cache_shapes, cache_specs, mesh)
+    dp = 1
+    for a in mesh.data_axes:
+        dp *= mesh.size(a)
+    B, S = shape.global_batch, shape.seq_len
+    bdev = max(B / dp, 1.0)
+    D, H = cfg.d_model, cfg.n_heads
+    act = 6.0 * bdev * S * D * 2                                   # residual streams
+    act += bdev * H * SDPA_BLOCK_Q * min(S, 64 * 1024) * 4          # attn scores block
+    if cfg.n_experts:
+        T = bdev * S
+        C = max(8, int(T * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+        act += 2.0 * cfg.n_experts * C * D * 2
+    total = p_bytes + c_bytes + act
+    return MemoryEstimate(p_bytes, 0.0, 0.0, act, c_bytes, total, chip.hbm_usable)
+
+
+def estimate_decode(
+    cfg: ModelConfig,
+    shape: ShapeCell,
+    param_shapes,
+    param_specs,
+    cache_shapes,
+    cache_specs,
+    mesh: MeshShape,
+    chip: ChipSpec = V5E,
+) -> MemoryEstimate:
+    # Serving weights are bf16 (checkpoint loaded at half the fp32 size).
+    p_bytes = 0.5 * bytes_per_device(param_shapes, param_specs, mesh)
+    c_bytes = bytes_per_device(cache_shapes, cache_specs, mesh)
+    act = 1e9  # decode transient allowance
+    total = p_bytes + c_bytes + act
+    return MemoryEstimate(p_bytes, 0.0, 0.0, act, c_bytes, total, chip.hbm_usable)

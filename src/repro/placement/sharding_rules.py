@@ -1,0 +1,200 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility-aware fallbacks.
+
+The planner (DESIGN.md §2.2) treats HBM as the hard constraint and picks, per
+tensor, the closest feasible sharding in preference order — the same
+best-feasible-fit selection as Alg 4's node selection, specialized to the
+structured 'cluster' of mesh axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# Tensor-parallel preference order over logical axes: the first divisible
+# logical dim in this list gets the "model" axis.
+TP_PREFERENCE = ("vocab", "experts", "ffn", "q_heads", "kv_heads", "ffn_in", "embed")
+
+
+def dp_only() -> bool:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf iter 2): for small
+    dense models the 16-way model axis mostly replicates per-token work; in
+    DP-only mode the model axis becomes extra data parallelism (batch over
+    all 256/512 devices, params ZeRO-sharded over both axes)."""
+    import os
+
+    return os.environ.get("REPRO_OPT_DP_ONLY", "0") == "1"
+
+
+def _tp_preference() -> Tuple[str, ...]:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf): sharding a weight on
+    its *input* ('embed') dim makes every matmul produce partial sums — an
+    activation-sized all-reduce per projection.  REPRO_OPT_NO_EMBED_TP=1
+    drops that fallback (weights replicate or ZeRO-shard instead), which is
+    what non-16-divisible-head archs (smollm, whisper) want."""
+    import os
+
+    if os.environ.get("REPRO_OPT_NO_EMBED_TP", "0") == "1":
+        return tuple(a for a in TP_PREFERENCE if a != "embed")
+    return TP_PREFERENCE
+
+# Logical axes whose divisibility must be checked semantically (head count,
+# expert count) rather than on the fused dim size.
+_SEMANTIC_COUNT = {"q_heads": "n_heads", "kv_heads": "n_kv_heads", "experts": "n_experts"}
+
+
+@dataclasses.dataclass
+class MeshShape:
+    """Named mesh axes and sizes, e.g. {"pod":2, "data":16, "model":16}."""
+
+    axes: Mapping[str, int]
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.axes)
+
+    def size(self, name: str) -> int:
+        return self.axes.get(name, 1)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for v in self.axes.values():
+            n *= v
+        return n
+
+
+def _divisible(cfg: ModelConfig, logical: str, dim_size: int, shards: int) -> bool:
+    if shards <= 1:
+        return True
+    if dim_size % shards != 0:
+        return False
+    sem = _SEMANTIC_COUNT.get(logical)
+    if sem is not None and getattr(cfg, sem) % shards != 0:
+        return False
+    return True
+
+
+def choose_tp_axis(
+    cfg: ModelConfig,
+    axes: Sequence[Optional[str]],
+    shape: Tuple[int, ...],
+    mesh: MeshShape,
+) -> Optional[int]:
+    """Index of the tensor dim that takes the 'model' axis, or None."""
+    model = mesh.size("model")
+    if model <= 1:
+        return None
+    pref = _tp_preference()
+    ranked = []
+    for i, name in enumerate(axes):
+        if name in pref and _divisible(cfg, name, shape[i], model):
+            ranked.append((pref.index(name), i))
+    if not ranked:
+        return None
+    return min(ranked)[1]
+
+
+def choose_fsdp_axis(
+    cfg: ModelConfig,
+    axes: Sequence[Optional[str]],
+    shape: Tuple[int, ...],
+    mesh: MeshShape,
+    taken: Optional[int],
+    fsdp_axes: Tuple[str, ...],
+) -> Optional[int]:
+    """Dim for ZeRO-style sharding over the data(+pod) axes, if any fits."""
+    shards = 1
+    for a in fsdp_axes:
+        shards *= mesh.size(a)
+    if shards <= 1:
+        return None
+    best = None
+    for i, name in enumerate(axes):
+        if i == taken or name is None or name == "layers":
+            continue
+        if _divisible(cfg, name, shape[i], shards):
+            if best is None or shape[i] > shape[best]:
+                best = i
+    return best
+
+
+def param_partition_spec(
+    cfg: ModelConfig,
+    axes: Sequence[Optional[str]],
+    shape: Tuple[int, ...],
+    mesh: MeshShape,
+    fsdp: bool,
+) -> P:
+    tp = None if dp_only() else choose_tp_axis(cfg, axes, shape, mesh)
+    entries: list = [None] * len(axes)
+    if tp is not None:
+        entries[tp] = "model"
+    if fsdp or dp_only():
+        fa = mesh.data_axes + ("model",) if dp_only() else mesh.data_axes
+        fs = choose_fsdp_axis(cfg, axes, shape, mesh, tp, fa)
+        if fs is not None:
+            entries[fs] = fa if len(fa) > 1 else fa[0]
+    return P(*entries)
+
+
+def batch_spec(
+    mesh: MeshShape, ndim: int, batch_dim: int = 0, batch_size: int | None = None
+) -> P:
+    entries: list = [None] * ndim
+    da = mesh.data_axes
+    if dp_only():
+        # Extend batch sharding onto the model axis only when divisible
+        # (e.g. global_batch 256 over a 2x16x16 mesh keeps pod+data DP and
+        # uses the model axis for ZeRO only).
+        ext = da + ("model",)
+        shards = 1
+        for a in ext:
+            shards *= mesh.size(a)
+        if batch_size is None or (batch_size % max(shards, 1) == 0):
+            da = ext
+    entries[batch_dim] = da if len(da) > 1 else (da[0] if da else None)
+    return P(*entries)
+
+
+def cache_partition_spec(
+    cfg: ModelConfig,
+    name: str,
+    leaf_shape: Tuple[int, ...],
+    mesh: MeshShape,
+    grouped: bool,
+) -> P:
+    """KV / recurrent-state sharding by leaf name.
+
+    KV leaves ('k'/'v', shape (..., S, Kv, hd)): batch over the data axes,
+    kv heads over 'model' when divisible, else the *sequence* dim over
+    'model' (KV sequence-parallel decode — attention then reduces partial
+    scores across the model axis).  Recurrent-state leaves shard batch and,
+    when divisible, the head dim."""
+    ndim = len(leaf_shape)
+    entries: list = [None] * ndim
+    b = 1 if grouped else 0
+    da = mesh.data_axes
+    dp = 1
+    for a in da:
+        dp *= mesh.size(a)
+    if ndim > b and leaf_shape[b] % max(dp, 1) == 0 and dp > 1:
+        entries[b] = da if len(da) > 1 else da[0]
+    model = mesh.size("model")
+    if model <= 1:
+        return P(*entries)
+    if name in ("k", "v") and ndim >= b + 3:
+        s_dim, kv_dim = ndim - 3, ndim - 2
+        if cfg.n_kv_heads % model == 0:
+            entries[kv_dim] = "model"
+        elif leaf_shape[s_dim] % model == 0:
+            entries[s_dim] = "model"
+    elif name in ("C", "n", "m") and ndim >= b + 2:
+        if leaf_shape[b + 1] == cfg.n_heads and cfg.n_heads % model == 0:
+            entries[b + 1] = "model"
+    return P(*entries)

@@ -1,0 +1,3 @@
+from .engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

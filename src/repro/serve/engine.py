@@ -1,0 +1,93 @@
+"""Batched serving engine: continuous-batching-lite decode loop over a jitted
+decode_step, with per-slot request lifecycle (admit → decode → finish)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import Model
+from ..models.registry import extend_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Fixed-slot batched decoding.  Admission fills empty slots; every step
+    decodes one token for all active slots (padding-token for idle ones)."""
+
+    def __init__(self, model: Model, params, batch_slots: int = 4, max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self._decode = jax.jit(model.decode_step)
+        self._requests: List[Optional[Request]] = [None] * batch_slots
+        self._pos = np.zeros(batch_slots, np.int32)
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.steps = 0
+
+    # Greedy sampling (temperature 0) keeps the engine deterministic for tests.
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+
+    def admit(self, req: Request) -> bool:
+        for i, slot in enumerate(self._requests):
+            if slot is None:
+                self._requests[i] = req
+                # Prefill the slot by feeding prompt tokens one at a time
+                # (keeps a single compiled decode fn; a production engine
+                # would use the batched prefill path per slot).
+                for j, tok in enumerate(req.prompt):
+                    t = jnp.zeros((self.slots, 1), jnp.int32).at[i, 0].set(int(tok))
+                    logits, self.cache = self._decode(
+                        self.params, self.cache, t, jnp.int32(j)
+                    )
+                self._pos[i] = len(req.prompt)
+                return True
+        return False
+
+    def step(self) -> None:
+        active = [i for i, r in enumerate(self._requests) if r is not None]
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            r = self._requests[i]
+            toks[i, 0] = r.output[-1] if r.output else (r.prompt[-1] if len(r.prompt) else 1)
+        pos = int(max(self._pos[i] for i in active))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), jnp.int32(pos)
+        )
+        nxt = self._sample(logits)
+        for i in active:
+            r = self._requests[i]
+            r.output.append(int(nxt[i]))
+            self._pos[i] += 1
+            if len(r.output) >= r.max_new_tokens or self._pos[i] >= self.max_seq - 1:
+                r.done = True
+                self._requests[i] = None
+        self.steps += 1
+
+    def run(self, requests: List[Request], max_steps: int = 512) -> List[Request]:
+        pending = list(requests)
+        finished: List[Request] = []
+        while (pending or any(r is not None for r in self._requests)) and self.steps < max_steps:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            self.step()
+            finished = [r for r in requests if r.done]
+            if len(finished) == len(requests):
+                break
+        return requests

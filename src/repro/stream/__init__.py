@@ -1,0 +1,19 @@
+# Stream-processing substrate: Storm-like topology builder API, the network
+# model, the steady-state throughput simulator (quantitative reproduction
+# vehicle on a CPU-only container), and a real threaded executor.
+from .api import TopologyBuilder
+from .network import NetworkModel, EMULAB_NETWORK
+from .simulator import SimResult, Simulator, simulate
+from .metrics import StatisticServer
+from . import topologies
+
+__all__ = [
+    "TopologyBuilder",
+    "NetworkModel",
+    "EMULAB_NETWORK",
+    "Simulator",
+    "SimResult",
+    "simulate",
+    "StatisticServer",
+    "topologies",
+]

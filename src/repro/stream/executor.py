@@ -1,0 +1,159 @@
+"""A real (threaded) topology executor: tasks run their component's payload
+``fn`` (typically a jitted JAX op) over queues, with placement-dependent
+emulated link latency.  End-to-end proof that a scheduled topology runs; the
+quantitative comparisons live in the simulator (this container has one core).
+
+Also the feeding point for the StatisticServer → StragglerMitigator loop.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..core.assignment import Assignment
+from ..core.cluster import Cluster
+from ..core.topology import Task, Topology
+from .metrics import StatisticServer
+from .network import EMULAB_NETWORK, NetworkModel
+
+_STOP = object()
+
+
+class LocalExecutor:
+    """Runs every task of a scheduled topology in its own thread.
+
+    Emulated network latency: a tuple sent between tasks placed on different
+    nodes carries a not-before timestamp ``now + latency(node_a, node_b)``;
+    the receiving task waits it out.  (Scaled by ``latency_scale`` so tests
+    stay fast.)
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        assignment: Assignment,
+        cluster: Cluster,
+        network: NetworkModel = EMULAB_NETWORK,
+        latency_scale: float = 1.0,
+        queue_capacity: int = 1024,
+    ):
+        self.topology = topology
+        self.assignment = assignment
+        self.cluster = cluster
+        self.network = network
+        self.latency_scale = latency_scale
+        self.stats = StatisticServer()
+        self._queues: Dict[str, "queue.Queue"] = {
+            t.id: queue.Queue(maxsize=queue_capacity) for t in topology.all_tasks()
+        }
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        # task id -> list of downstream task ids (shuffle grouping).
+        self._routes: Dict[str, List[str]] = {}
+        for src, dst in topology.edges:
+            dst_ids = [t.id for t in topology.components[dst].tasks(topology.id)]
+            for ts in topology.components[src].tasks(topology.id):
+                self._routes.setdefault(ts.id, []).extend(dst_ids)
+
+    # -- wiring ---------------------------------------------------------------
+    def _latency_between(self, task_a: str, task_b: str) -> float:
+        na = self.assignment.placements.get(task_a)
+        nb = self.assignment.placements.get(task_b)
+        if na is None or nb is None:
+            return 0.0
+        return self.network.latency(self.cluster, na, nb) * self.latency_scale
+
+    def _emit(self, src_task: str, value: Any, rr_state: Dict[str, int]) -> None:
+        routes = self._routes.get(src_task, [])
+        if not routes:
+            return
+        # Shuffle grouping ≈ round-robin across downstream tasks.
+        i = rr_state.get(src_task, 0)
+        dst = routes[i % len(routes)]
+        rr_state[src_task] = i + 1
+        not_before = time.perf_counter() + self._latency_between(src_task, dst)
+        try:
+            self._queues[dst].put((not_before, value), timeout=1.0)
+        except queue.Full:
+            pass  # drop (at-most-once path; acked mode is simulated analytically)
+
+    def _spout_loop(self, task: Task, max_tuples: Optional[int]) -> None:
+        comp = self.topology.component_of(task)
+        fn: Callable = comp.fn or (lambda i: i)
+        rr: Dict[str, int] = {}
+        n = 0
+        while not self._stop.is_set():
+            if max_tuples is not None and n >= max_tuples:
+                break
+            t0 = time.perf_counter()
+            value = fn(n)
+            self.stats.record_tuple(task.id, time.perf_counter() - t0)
+            self._emit(task.id, value, rr)
+            n += 1
+        # Flush sentinels downstream so bolts can finish.
+        for dst in set(self._routes.get(task.id, [])):
+            try:
+                self._queues[dst].put((0.0, _STOP), timeout=1.0)
+            except queue.Full:
+                pass
+
+    def _bolt_loop(self, task: Task) -> None:
+        comp = self.topology.component_of(task)
+        fn: Callable = comp.fn or (lambda x: x)
+        q = self._queues[task.id]
+        rr: Dict[str, int] = {}
+        upstream_tasks = sum(
+            self.topology.components[u].parallelism
+            for u in self.topology.upstream(task.component_id)
+        )
+        stops_seen = 0
+        while not self._stop.is_set():
+            try:
+                not_before, value = q.get(timeout=0.25)
+            except queue.Empty:
+                continue
+            if value is _STOP:
+                stops_seen += 1
+                if stops_seen >= max(1, upstream_tasks):
+                    break
+                continue
+            wait = not_before - time.perf_counter()
+            if wait > 0:
+                time.sleep(wait)
+            t0 = time.perf_counter()
+            out = fn(value)
+            self.stats.record_tuple(task.id, time.perf_counter() - t0)
+            if out is not None:
+                self._emit(task.id, out, rr)
+        for dst in set(self._routes.get(task.id, [])):
+            try:
+                self._queues[dst].put((0.0, _STOP), timeout=1.0)
+            except queue.Full:
+                pass
+
+    # -- public API -------------------------------------------------------------
+    def run(self, max_tuples_per_spout: int = 100, timeout_s: float = 60.0) -> StatisticServer:
+        """Run to completion (each spout emits ``max_tuples_per_spout``)."""
+        for task in self.topology.all_tasks():
+            comp = self.topology.component_of(task)
+            if comp.is_spout:
+                th = threading.Thread(
+                    target=self._spout_loop, args=(task, max_tuples_per_spout), daemon=True
+                )
+            else:
+                th = threading.Thread(target=self._bolt_loop, args=(task,), daemon=True)
+            self._threads.append(th)
+        for th in self._threads:
+            th.start()
+        deadline = time.perf_counter() + timeout_s
+        for th in self._threads:
+            remain = deadline - time.perf_counter()
+            th.join(timeout=max(0.0, remain))
+        self._stop.set()
+        return self.stats
+
+    def stop(self) -> None:
+        self._stop.set()

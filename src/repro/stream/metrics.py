@@ -1,0 +1,64 @@
+"""StatisticServer (paper §5.1): throughput on a task, component, and topology
+level, plus EWMA service times feeding the straggler mitigator."""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, Optional
+
+
+class StatisticServer:
+    def __init__(self, ewma_alpha: float = 0.2):
+        self._lock = threading.Lock()
+        self._counts: Dict[str, int] = collections.defaultdict(int)
+        self._service_ewma: Dict[str, float] = {}
+        self._alpha = ewma_alpha
+        self._t0 = time.perf_counter()
+
+    # -- recording ---------------------------------------------------------------
+    def record_tuple(self, task_id: str, service_time_s: Optional[float] = None) -> None:
+        with self._lock:
+            self._counts[task_id] += 1
+            if service_time_s is not None:
+                prev = self._service_ewma.get(task_id)
+                if prev is None:
+                    self._service_ewma[task_id] = service_time_s
+                else:
+                    self._service_ewma[task_id] = (
+                        self._alpha * service_time_s + (1 - self._alpha) * prev
+                    )
+
+    # -- queries -------------------------------------------------------------------
+    def task_counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._counts)
+
+    def component_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = collections.defaultdict(int)
+        for tid, n in self.task_counts().items():
+            out[tid.split("[")[0]] += n
+        return dict(out)
+
+    def topology_count(self, topology_id: str) -> int:
+        prefix = f"{topology_id}/"
+        return sum(n for t, n in self.task_counts().items() if t.startswith(prefix))
+
+    def service_times(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._service_ewma)
+
+    def throughput(self, task_prefix: str = "") -> float:
+        """Tuples/s since start for tasks matching the prefix."""
+        dt = max(time.perf_counter() - self._t0, 1e-9)
+        return (
+            sum(n for t, n in self.task_counts().items() if t.startswith(task_prefix))
+            / dt
+        )
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts.clear()
+            self._service_ewma.clear()
+            self._t0 = time.perf_counter()

@@ -1,0 +1,21 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
+from .train_loop import TrainOptions, init_train_state, make_train_step
+from .checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from .compression import (
+    compress_grads_with_feedback,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule",
+    "TrainOptions", "init_train_state", "make_train_step",
+    "AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint",
+    "compress_grads_with_feedback", "dequantize_int8", "init_error_feedback", "quantize_int8",
+]

@@ -1,0 +1,148 @@
+"""Sharded checkpointing with manifest + async writer (fault tolerance,
+DESIGN.md §5).
+
+Layout: ``<dir>/step_<N>/manifest.json`` + one ``.npy`` per leaf (keyed by a
+stable flattened path).  Restore is elastic: it only needs the manifest, so a
+restarted job with a different mesh re-shards on load (plans are pure
+functions of (topology, cluster) — same property the paper relies on for
+Nimbus statelessness)."""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, state) -> str:
+    """Synchronous save.  Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "time": time.time()}
+    for key, leaf in _flatten_with_paths(state):
+        arr = np.asarray(leaf)
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns (state, step)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for key, meta in manifest["leaves"].items():
+        leaves[key] = np.load(os.path.join(path, meta["file"]))
+    flat_like = _flatten_with_paths(like)
+    restored = []
+    for key, leaf in flat_like:
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = leaves[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"leaf {key!r}: checkpoint {arr.shape} != wanted {want}")
+        restored.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, restored), step
+
+
+class AsyncCheckpointer:
+    """Background writer: training never blocks on I/O.  ``save`` snapshots
+    to host memory synchronously (cheap) and enqueues the disk write."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._done: Dict[int, str] = {}
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_state = item
+            try:
+                path = save_checkpoint(self.directory, step, host_state)
+                self._done[step] = path
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(self._done)
+        while len(steps) > self.keep:
+            s = steps.pop(0)
+            path = self._done.pop(s)
+            shutil.rmtree(path, ignore_errors=True)
+
+    def save(self, step: int, state) -> None:
+        if self._err:
+            raise self._err
+        host_state = jax.tree_util.tree_map(lambda x: np.asarray(x), state)
+        self._q.put((step, host_state))
+
+    def wait(self, timeout: float = 60.0) -> None:
+        deadline = time.time() + timeout
+        while not self._q.empty():
+            if time.time() > deadline:
+                raise TimeoutError("checkpoint queue did not drain")
+            time.sleep(0.01)
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

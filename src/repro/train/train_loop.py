@@ -1,0 +1,99 @@
+"""Training step construction: value_and_grad + gradient accumulation +
+AdamW, built per (model, plan)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import Model
+from .compression import compress_grads_with_feedback, init_error_feedback
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    opt: AdamWConfig = AdamWConfig()
+    n_micro: int = 1
+    compress_grads: bool = False
+
+
+def init_train_state(model: Model, key, opts: TrainOptions) -> Dict[str, Any]:
+    params = model.init_params(key)
+    state = {"params": params, "opt": init_opt_state(params)}
+    if opts.compress_grads:
+        state["err"] = init_error_feedback(params)
+    return state
+
+
+def _bf16_grad_reduce() -> bool:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf iter 3): cast grads to
+    bf16 before the data-parallel reduction (halves all-reduce bytes; Adam
+    statistics stay fp32).  Off by default."""
+    import os
+
+    return os.environ.get("REPRO_OPT_BF16_GRADS", "0") == "1"
+
+
+def make_train_step(model: Model, opts: TrainOptions = TrainOptions()) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Gradient accumulation: the global batch is split into ``n_micro``
+    microbatches scanned sequentially; grads are averaged in fp32.  With a
+    sharded batch this is exactly the memory/throughput trade the planner's
+    hard-constraint escalation selects (DESIGN.md §2.2).
+    """
+
+    def loss_for(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if opts.n_micro <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            if _bf16_grad_reduce():
+                grads = jax.tree_util.tree_map(
+                    lambda g: g.astype(jnp.bfloat16), grads
+                )
+        else:
+            n = opts.n_micro
+
+            def split(x):
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32) / n, acc_g, g
+                )
+                return (acc_g, acc_l + l / n), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        new_state = dict(state)
+        if opts.compress_grads:
+            grads, new_err = compress_grads_with_feedback(grads, state["err"])
+            new_state["err"] = new_err
+        params_new, opt_new, opt_metrics = adamw_update(
+            opts.opt, params, grads, state["opt"]
+        )
+        new_state["params"] = params_new
+        new_state["opt"] = opt_new
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

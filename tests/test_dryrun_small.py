@@ -1,0 +1,75 @@
+"""Small-mesh dry-run integration test: the same lower+compile path as the
+512-device production dry-run, on a tiny forced-device mesh.
+
+Runs in a subprocess because XLA_FLAGS must be set before jax initializes.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.configs.base import ShapeCell
+    from repro.models import build_from_config, input_specs
+    from repro.placement import MeshShape, ResourceAwarePlanner, activation_rules
+    from repro.launch.dryrun import _lower_cell, collective_bytes
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mshape = MeshShape({"data": 4, "model": 2})
+    planner = ResourceAwarePlanner()
+    results = {}
+    for arch, shape in (
+        ("qwen3-0.6b", ShapeCell("train_small", 256, 8, "train")),
+        ("olmoe-1b-7b", ShapeCell("decode_small", 256, 8, "decode")),
+        ("recurrentgemma-9b", ShapeCell("prefill_small", 256, 8, "prefill")),
+    ):
+        cfg = dataclasses.replace(
+            configs.get_smoke(arch), n_layers=len(configs.get_smoke(arch).pattern)
+        )
+        model = build_from_config(cfg)
+        plan = planner.plan(model, shape, mshape)
+        specs = input_specs(cfg, shape)
+        with mesh:
+            with activation_rules(plan.activation_rules):
+                lowered = _lower_cell(
+                    model, cfg, shape, mesh, mshape, plan, specs, 1, False
+                )
+                compiled = lowered.compile()
+        txt = compiled.as_text()
+        results[arch] = {
+            "collectives": sorted(collective_bytes(txt)),
+            "mem": float(compiled.memory_analysis().temp_size_in_bytes),
+        }
+    print("RESULT " + json.dumps(results))
+    """
+)
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_compiles_all_kinds():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    results = json.loads(line[len("RESULT "):])
+    assert set(results) == {"qwen3-0.6b", "olmoe-1b-7b", "recurrentgemma-9b"}
+    for arch, r in results.items():
+        assert r["mem"] >= 0

@@ -1,0 +1,193 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, with
+hypothesis shape/dtype sweeps (assignment deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attn import decode_attention, decode_attention_ref
+from repro.kernels.flash import attention_ref, flash_attention, flash_attention_op
+from repro.kernels.mlstm import mlstm_chunk, mlstm_chunk_op, mlstm_ref
+from repro.kernels.moe_gemm import grouped_gemm, grouped_gemm_ref
+from repro.kernels.rglru import rglru_scan, rglru_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol_for(dt):
+    return 3e-2 if dt == jnp.bfloat16 else 1e-4
+
+
+def assert_close(got, ref, dt):
+    got = np.asarray(got, np.float32)
+    ref = np.asarray(ref, np.float32)
+    denom = max(np.max(np.abs(ref)), 1e-6)
+    assert np.max(np.abs(got - ref)) / denom <= tol_for(dt), (
+        f"relerr {np.max(np.abs(got - ref)) / denom:.2e}"
+    )
+
+
+# -- flash attention ---------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    kv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    s=st.sampled_from([128, 256]),
+    hd=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    dt=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_flash_attention_sweep(b, kv, g, s, hd, causal, dt):
+    h = kv * g
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dt)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dt)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dt)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    assert_close(got, ref, dt)
+
+
+@pytest.mark.parametrize("window", [64, 128, 256])
+def test_flash_attention_sliding_window(window):
+    b, h, kv, s, hd = 1, 4, 2, 512, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd))
+    k = jax.random.normal(ks[1], (b, kv, s, hd))
+    v = jax.random.normal(ks[2], (b, kv, s, hd))
+    got = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    assert_close(got, ref, jnp.float32)
+
+
+def test_flash_op_model_layout():
+    b, s, h, kv, hd = 2, 256, 4, 2, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    got = flash_attention_op(q, k, v, interpret=True)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    assert_close(got, ref, jnp.float32)
+
+
+# -- decode attention -----------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    kv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 4]),
+    s=st.sampled_from([512, 1024]),
+    frac=st.floats(0.01, 1.0),
+    dt=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_decode_attention_sweep(b, kv, g, s, frac, dt):
+    h, hd = kv * g, 64
+    length = max(int(s * frac), 1)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dt)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dt)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dt)
+    got = decode_attention(q, k, v, length, block_k=256, interpret=True)
+    ref = decode_attention_ref(q, k, v, length)
+    assert_close(got, ref, dt)
+
+
+# -- rglru ------------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.sampled_from([1, 3]),
+    s=st.sampled_from([128, 256, 512]),
+    d=st.sampled_from([64, 128]),
+    blk=st.sampled_from([64, 128, 256]),
+)
+def test_rglru_sweep(b, s, d, blk):
+    if s % blk != 0:
+        blk = s
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, s, d)))
+    x = jax.random.normal(ks[1], (b, s, d))
+    h0 = jax.random.normal(ks[2], (b, d))
+    got = rglru_scan(a, x, h0, block_t=blk, interpret=True)
+    ref = rglru_scan_ref(a, x, h0)
+    assert_close(got, ref, jnp.float32)
+
+
+def test_rglru_matches_model_block():
+    """Kernel vs the model's associative-scan implementation."""
+    from repro.models.recurrent import rglru_forward, rglru_spec
+    from repro.models.common import init_from_spec
+    from repro import configs
+
+    cfg = configs.get_smoke("recurrentgemma-9b")
+    p = init_from_spec(rglru_spec(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model), jnp.float32)
+    out_model, state = rglru_forward(cfg, p, x)
+    # Re-derive a,gated as the model does and push through the kernel.
+    from repro.models.recurrent import _causal_conv4, _rglru_gates
+
+    xb, _ = _causal_conv4(p, x @ p["w_in_x"])
+    a, gated = _rglru_gates(p, xb, x)
+    h = rglru_scan(a, gated, jnp.zeros((2, cfg.d_model)), block_t=32, interpret=True)
+    gate = jax.nn.gelu((x @ p["w_in_gate"]).astype(jnp.float32))
+    out_kernel = (h * gate) @ p["w_out"]
+    assert_close(out_kernel, out_model, jnp.float32)
+
+
+# -- mlstm -------------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2]),
+    s=st.sampled_from([128, 256]),
+    hd=st.sampled_from([32, 64]),
+    chunk=st.sampled_from([64, 128]),
+)
+def test_mlstm_sweep(b, h, s, hd, chunk):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, h, s, hd))
+    k = jax.random.normal(ks[1], (b, h, s, hd)) / np.sqrt(hd)
+    v = jax.random.normal(ks[2], (b, h, s, hd))
+    li = jax.random.normal(ks[3], (b, h, s))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, h, s)) + 2.0)
+    got = mlstm_chunk(q, k, v, li, lf, chunk=chunk, interpret=True)
+    ref = mlstm_ref(q, k, v, li, lf)
+    assert_close(got, ref, jnp.float32)
+
+
+def test_mlstm_matches_model_forward():
+    """Kernel vs the model's chunkwise jnp implementation."""
+    from repro.models.recurrent import _mlstm_qkv_gates, mlstm_spec
+    from repro.models.common import init_from_spec
+    from repro import configs
+
+    cfg = configs.get_smoke("xlstm-350m")
+    p = init_from_spec(mlstm_spec(cfg), KEY)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), jnp.float32)
+    q, k, v, li, lf = _mlstm_qkv_gates(cfg, p, x)
+    got = mlstm_chunk(q, k, v, li, lf, chunk=32, interpret=True)
+    ref = mlstm_ref(q, k, v, li, lf)
+    assert_close(got, ref, jnp.float32)
+
+
+# -- grouped gemm ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    e=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([128, 256]),
+    d=st.sampled_from([128, 256]),
+    f=st.sampled_from([128, 384]),
+    dt=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_grouped_gemm_sweep(e, c, d, f, dt):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (e, c, d), dt)
+    w = jax.random.normal(ks[1], (e, d, f), dt) * 0.05
+    got = grouped_gemm(x, w, interpret=True)
+    ref = grouped_gemm_ref(x, w)
+    assert_close(got, ref, dt)

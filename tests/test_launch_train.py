@@ -1,0 +1,36 @@
+"""Integration test for the distributed launcher: planner-driven sharded
+training on forced host devices, with checkpoint-resume (fault tolerance)."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(extra, ckpt):
+    return subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.train",
+            "--arch", "smollm-360m", "--smoke", "--devices", "4",
+            "--batch", "8", "--seq-len", "32", "--ckpt-dir", ckpt,
+        ]
+        + extra,
+        capture_output=True,
+        text=True,
+        timeout=420,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=".",
+    )
+
+
+@pytest.mark.slow
+def test_launcher_trains_and_resumes(tmp_path):
+    ckpt = str(tmp_path / "ck")
+    p1 = _run(["--steps", "20"], ckpt)
+    assert p1.returncode == 0, p1.stderr[-2000:]
+    assert "step   20" in p1.stdout
+    # Restart from the step-20 checkpoint and continue to 30.
+    p2 = _run(["--steps", "30", "--resume"], ckpt)
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "resumed from step 20" in p2.stdout
+    assert "step   30" in p2.stdout

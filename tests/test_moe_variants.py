@@ -1,0 +1,73 @@
+"""MoE dispatch-variant tests: the grouped (shard-local) dispatch used by the
+optimized path must agree with the global-sort baseline when capacity is
+generous, and degrade gracefully (token dropping) when it is not."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models.common import init_from_spec
+from repro.models.moe import (
+    moe_capacity,
+    moe_forward_global,
+    moe_forward_grouped,
+    moe_spec,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(capacity_factor=8.0, B=4, S=32, arch="olmoe-1b-7b"):
+    cfg = dataclasses.replace(configs.get_smoke(arch), capacity_factor=capacity_factor)
+    p = init_from_spec(moe_spec(cfg), KEY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    return cfg, p, x
+
+
+def test_grouped_matches_global_dropless():
+    cfg, p, x = _setup(capacity_factor=8.0)
+    a, aux_a = moe_forward_global(cfg, p, x)
+    b, aux_b = moe_forward_grouped(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+    assert abs(float(aux_a - aux_b)) < 1e-5
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 4]),
+    s=st.sampled_from([16, 32]),
+    cf=st.floats(0.5, 4.0),
+)
+def test_grouped_output_finite_and_bounded(b, s, cf):
+    cfg, p, x = _setup(capacity_factor=cf, B=b, S=s)
+    out, aux = moe_forward_grouped(cfg, p, x)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(aux))
+    # With tokens dropped, outputs are a gated convex-ish combination of
+    # expert outputs — magnitudes stay bounded.
+    assert float(jnp.max(jnp.abs(out))) < 1e3
+
+
+def test_capacity_is_lane_aligned():
+    cfg, _, _ = _setup()
+    for t in (64, 1000, 4096):
+        c = moe_capacity(cfg, t)
+        assert c % 8 == 0 and c >= 8
+
+
+def test_grouped_drops_when_capacity_tight():
+    """At capacity_factor << 1, some tokens must be dropped (outputs for
+    dropped tokens are zero-contribution), and nothing NaNs."""
+    cfg, p, x = _setup(capacity_factor=0.25)
+    out, _ = moe_forward_grouped(cfg, p, x)
+    out_full, _ = moe_forward_grouped(
+        dataclasses.replace(cfg, capacity_factor=8.0), p, x
+    )
+    # dropped-token path differs from the dropless one
+    assert float(jnp.max(jnp.abs(out - out_full))) > 1e-6
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,194 @@
+"""Unit + property tests for the R-Storm scheduling core (Alg 1-4)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnnealedScheduler,
+    Assignment,
+    Cluster,
+    Component,
+    NodeSpec,
+    RoundRobinScheduler,
+    RStormPlusScheduler,
+    RStormScheduler,
+    Topology,
+    bfs_topology_traversal,
+    demand,
+    emulab_cluster,
+    task_selection,
+    weighted_distance,
+)
+
+
+def linear_topology(n_bolts=3, parallelism=4, mem=512.0, cpu=30.0):
+    t = Topology("lin")
+    prev = None
+    for i in range(n_bolts + 1):
+        c = Component(f"c{i}", is_spout=(i == 0), parallelism=parallelism)
+        c.set_memory_load(mem).set_cpu_load(cpu)
+        t.add_component(c)
+        if prev:
+            t.add_edge(prev, c.id)
+        prev = c.id
+    return t
+
+
+# -- resources ----------------------------------------------------------------
+def test_resource_vector_arithmetic():
+    a = demand(100.0, 10.0, 1.0)
+    b = demand(50.0, 5.0, 0.5)
+    assert (a - b)["memory_mb"] == 50.0
+    assert (a + b)["cpu_points"] == 15.0
+    assert a.satisfies_hard(b)
+    assert not b.satisfies_hard(a)
+    assert a.hard == frozenset({"memory_mb"})
+
+
+def test_weighted_distance_matches_alg4():
+    d = demand(100.0, 50.0)
+    avail = demand(200.0, 70.0)
+    got = weighted_distance(d, avail, weights={"memory_mb": 1.0, "cpu_points": 1.0, "bandwidth": 1.0}, network_distance=2.0)
+    assert got == pytest.approx(math.sqrt(100.0**2 + 20.0**2 + 4.0))
+
+
+# -- traversal (Alg 2, 3) -------------------------------------------------------
+def test_bfs_starts_at_spout_and_orders_adjacent():
+    t = linear_topology()
+    order = bfs_topology_traversal(t)
+    assert order == ["c0", "c1", "c2", "c3"]
+
+
+def test_bfs_diamond_visits_all_once():
+    t = Topology("d")
+    for cid, sp in [("s", True), ("a", False), ("b", False), ("j", False)]:
+        t.add_component(Component(cid, is_spout=sp))
+    t.add_edge("s", "a")
+    t.add_edge("s", "b")
+    t.add_edge("a", "j")
+    t.add_edge("b", "j")
+    order = bfs_topology_traversal(t)
+    assert sorted(order) == ["a", "b", "j", "s"]
+    assert order[0] == "s"
+
+
+def test_task_selection_interleaves_components():
+    t = linear_topology(n_bolts=1, parallelism=2)
+    ordering = [tk.component_id for tk in task_selection(t)]
+    assert ordering == ["c0", "c1", "c0", "c1"]
+
+
+def test_task_selection_covers_all_tasks():
+    t = linear_topology(n_bolts=3, parallelism=5)
+    tasks = task_selection(t)
+    assert len(tasks) == t.task_count()
+    assert len({tk.id for tk in tasks}) == len(tasks)
+
+
+# -- schedulers -----------------------------------------------------------------
+def test_rstorm_places_all_and_respects_memory():
+    t = linear_topology()
+    cl = emulab_cluster()
+    a = RStormScheduler().schedule(t, cl, commit=False)
+    assert a.is_complete(t)
+    assert a.hard_violations(t, cl) == []
+
+
+def test_rstorm_uses_fewer_machines_lower_netcost_than_default():
+    t = linear_topology()
+    cl = emulab_cluster()
+    rr = RoundRobinScheduler(seed=3).schedule(t, cl, commit=False)
+    cl.reset()
+    rs = RStormScheduler().schedule(t, cl, commit=False)
+    assert len(rs.nodes_used()) < len(rr.nodes_used())
+    assert rs.network_cost(t, cl) < rr.network_cost(t, cl)
+
+
+def test_rstorm_reports_unassigned_when_infeasible():
+    t = linear_topology(mem=4096.0)  # no node has 4 GB
+    cl = emulab_cluster()
+    a = RStormScheduler().schedule(t, cl, commit=False)
+    assert len(a.unassigned) == t.task_count()
+    assert a.hard_violations(t, cl) == []
+
+
+def test_commit_updates_cluster_state():
+    t = linear_topology()
+    cl = emulab_cluster()
+    RStormScheduler().schedule(t, cl, commit=True)
+    used = sum(len(n.assigned_tasks) for n in cl.nodes.values())
+    assert used == t.task_count()
+    total_before = cl.total_capacity()["memory_mb"]
+    avail = cl.total_available()["memory_mb"]
+    assert avail == pytest.approx(total_before - 512.0 * t.task_count())
+
+
+def test_round_robin_modes_cover_all_tasks():
+    t = linear_topology()
+    for mode in ("port_major", "node_major"):
+        cl = emulab_cluster()
+        a = RoundRobinScheduler(seed=0, slot_mode=mode).schedule(t, cl, commit=False)
+        assert a.is_complete(t)
+
+
+def test_annealed_never_worse_than_seed():
+    t = linear_topology(n_bolts=4, parallelism=3)
+    cl = emulab_cluster()
+    seed = RStormScheduler().schedule(t, cl, commit=False)
+    cl.reset()
+    ann = AnnealedScheduler(iters=300).schedule(t, cl, commit=False)
+    assert ann.network_cost(t, cl) <= seed.network_cost(t, cl) + 1e-9
+
+
+# -- hypothesis property tests ----------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    n_bolts=st.integers(1, 6),
+    par=st.integers(1, 6),
+    mem=st.floats(16.0, 1024.0),
+    cpu=st.floats(1.0, 120.0),
+    racks=st.integers(1, 4),
+    npr=st.integers(1, 8),
+)
+def test_property_hard_constraints_never_violated(n_bolts, par, mem, cpu, racks, npr):
+    t = linear_topology(n_bolts=n_bolts, parallelism=par, mem=mem, cpu=cpu)
+    cl = Cluster.homogeneous(racks=racks, nodes_per_rack=npr)
+    a = RStormScheduler().schedule(t, cl, commit=False)
+    # Invariant 1: placements ∪ unassigned is a partition of all tasks.
+    all_ids = {tk.id for tk in t.all_tasks()}
+    assert set(a.placements) | set(a.unassigned) == all_ids
+    assert not (set(a.placements) & set(a.unassigned))
+    # Invariant 2: no node over its hard memory budget.
+    assert a.hard_violations(t, cl) == []
+    # Invariant 3: if memory fits anywhere, at least one task is placed.
+    if mem <= 2048.0:
+        assert a.placements
+
+
+@settings(max_examples=20, deadline=None)
+@given(par=st.integers(1, 5), seed=st.integers(0, 10))
+def test_property_rstorm_netcost_beats_or_ties_roundrobin(par, seed):
+    t = linear_topology(n_bolts=3, parallelism=par)
+    cl = emulab_cluster()
+    rr = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    cl.reset()
+    rs = RStormScheduler().schedule(t, cl, commit=False)
+    assert rs.network_cost(t, cl) <= rr.network_cost(t, cl) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_property_schedulers_are_deterministic(seed):
+    t = linear_topology()
+    cl = emulab_cluster()
+    a1 = RStormScheduler().schedule(t, cl, commit=False)
+    cl.reset()
+    a2 = RStormScheduler().schedule(t, cl, commit=False)
+    assert a1.placements == a2.placements
+    cl.reset()
+    b1 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    cl.reset()
+    b2 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    assert b1.placements == b2.placements

@@ -1,0 +1,152 @@
+"""Simulator + multi-topology + rescheduler behaviour tests (paper §6)."""
+
+import pytest
+
+from repro.core import (
+    GlobalState,
+    Rescheduler,
+    RoundRobinScheduler,
+    RStormScheduler,
+    StragglerMitigator,
+    emulab_cluster,
+    emulab_cluster_24,
+)
+from repro.stream import Simulator, topologies
+
+
+def _run(topo, sched, cl):
+    cl.reset()
+    a = sched.schedule(topo, cl, commit=False)
+    cl.reset()
+    return a, Simulator(cl).run(topo, a)
+
+
+# -- Fig 8 / 9 / 12 bands -----------------------------------------------------
+@pytest.mark.parametrize("name,lo,hi", [("linear", 25, 80), ("diamond", 20, 60), ("star", 25, 70)])
+def test_network_bound_gain_bands(name, lo, hi):
+    cl = emulab_cluster()
+    t = topologies.ALL_MICRO[name](network_bound=True)
+    _, rr = _run(t, RoundRobinScheduler(seed=1), cl)
+    _, rs = _run(t, RStormScheduler(), cl)
+    gain = (rs.sink_throughput / rr.sink_throughput - 1) * 100
+    assert lo <= gain <= hi, f"{name}: gain {gain:.1f}% outside [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("name", ["linear", "diamond"])
+def test_cpu_bound_same_throughput_fewer_machines(name):
+    cl = emulab_cluster()
+    t = topologies.ALL_MICRO[name](network_bound=False)
+    _, rr = _run(t, RoundRobinScheduler(seed=1), cl)
+    _, rs = _run(t, RStormScheduler(), cl)
+    assert rs.sink_throughput == pytest.approx(rr.sink_throughput, rel=0.05)
+    assert rs.machines_used <= rr.machines_used * 0.67
+    assert rs.avg_cpu_utilization > rr.avg_cpu_utilization * 1.4
+
+
+def test_star_cpu_default_bottleneck():
+    """§6.3.2: node-major default stacks heavy centre tasks -> bottleneck."""
+    cl = emulab_cluster()
+    t = topologies.star(network_bound=False)
+    _, rr = _run(t, RoundRobinScheduler(seed=1, slot_mode="node_major"), cl)
+    _, rs = _run(t, RStormScheduler(), cl)
+    assert rs.sink_throughput > rr.sink_throughput * 2.0
+    assert rs.avg_cpu_utilization > rr.avg_cpu_utilization * 2.5
+
+
+@pytest.mark.parametrize("name,lo", [("pageload", 30), ("processing", 25)])
+def test_yahoo_gains(name, lo):
+    cl = emulab_cluster()
+    t = topologies.ALL_YAHOO[name]()
+    _, rr = _run(t, RoundRobinScheduler(seed=1), cl)
+    _, rs = _run(t, RStormScheduler(), cl)
+    gain = (rs.sink_throughput / rr.sink_throughput - 1) * 100
+    assert gain >= lo
+
+
+# -- Fig 13 multi-topology -------------------------------------------------------
+def test_multi_topology_rstorm_keeps_both_healthy():
+    cl = emulab_cluster_24()
+    gs = GlobalState(cl)
+    pl, pr = topologies.pageload(), topologies.processing()
+    a1 = gs.submit(pl, RStormScheduler())
+    a2 = gs.submit(pr, RStormScheduler())
+    assert not a1.unassigned and not a2.unassigned
+    res = Simulator(cl).run_many([(pl, a1), (pr, a2)])
+    assert res["pageload"].thrashed_nodes == []
+    assert res["processing"].sink_throughput > 1000
+    assert res["pageload"].sink_throughput > 500
+
+
+def test_multi_topology_default_collapses_processing():
+    cl = emulab_cluster_24()
+    gs = GlobalState(cl)
+    pl, pr = topologies.pageload(), topologies.processing()
+    a1 = gs.submit(pl, RoundRobinScheduler(seed=10, slot_mode="node_major"))
+    a2 = gs.submit(pr, RoundRobinScheduler(seed=2, slot_mode="node_major"))
+    res = Simulator(cl).run_many([(pl, a1), (pr, a2)])
+    assert res["processing"].thrashed_nodes  # memory over-subscription
+    assert res["processing"].sink_throughput < 100  # "grinded to a near halt"
+    assert res["pageload"].sink_throughput > 300  # degraded but alive
+
+
+def test_kill_returns_resources():
+    cl = emulab_cluster_24()
+    gs = GlobalState(cl)
+    pl = topologies.pageload()
+    gs.submit(pl, RStormScheduler())
+    before = cl.total_available()["memory_mb"]
+    gs.kill("pageload")
+    after = cl.total_available()["memory_mb"]
+    assert after > before
+    assert after == pytest.approx(cl.total_capacity()["memory_mb"])
+
+
+# -- fault tolerance ---------------------------------------------------------------
+def test_rescheduler_moves_orphans_and_stays_feasible():
+    cl = emulab_cluster()
+    gs = GlobalState(cl)
+    t = topologies.linear(network_bound=True)
+    a = gs.submit(t, RStormScheduler())
+    victim = a.nodes_used()[0]
+    moved = Rescheduler(gs).handle_node_failure(victim)
+    assert moved, "tasks should have been migrated"
+    # All placements now on live nodes, hard constraints hold.
+    for tid, nid in a.placements.items():
+        assert cl.nodes[nid].alive
+    assert a.hard_violations(t, cl) == []
+
+
+def test_rescheduler_scale_up_places_unassigned():
+    from repro.core import NodeSpec
+
+    cl = emulab_cluster()
+    gs = GlobalState(cl)
+    t = topologies.linear(network_bound=True)
+    a = gs.submit(t, RStormScheduler())
+    # Kill enough nodes that some tasks cannot be placed.
+    resch = Rescheduler(gs)
+    for nid in list(a.nodes_used()):
+        resch.handle_node_failure(nid)
+    for nid in [n for n in cl.nodes if cl.nodes[n].alive][:4]:
+        resch.handle_node_failure(nid)
+    # Now scale up with fresh nodes; unassigned tasks must land.
+    resch.handle_scale_up(
+        [NodeSpec(f"new{i}", "rack_new", 100.0, 2048.0) for i in range(8)]
+    )
+    assert a.is_complete(t)
+
+
+def test_straggler_mitigator_moves_slow_task():
+    cl = emulab_cluster()
+    gs = GlobalState(cl)
+    t = topologies.linear(network_bound=True)
+    a = gs.submit(t, RStormScheduler())
+    tid = next(iter(a.placements))
+    times = {x.id: 0.001 for x in t.all_tasks()}
+    times[tid] = 0.5  # 500x the median
+    mit = StragglerMitigator(gs)
+    stragglers = mit.find_stragglers(times)
+    assert tid in stragglers
+    old_node = a.placements[tid]
+    moves = mit.migrate([tid])
+    assert moves.get(tid) is not None and moves[tid] != old_node
