@@ -10,7 +10,6 @@ Claims reproduced:
 
 from __future__ import annotations
 
-from repro.core import RoundRobinScheduler, RStormScheduler, emulab_cluster
 from repro.stream import topologies
 
 from .common import compare_schedulers, emit_csv_row
@@ -22,14 +21,15 @@ def run() -> list:
     rows = []
     for name, maker in topologies.ALL_MICRO.items():
         schedulers = [
-            ("default", RoundRobinScheduler(seed=1)),
-            ("rstorm", RStormScheduler()),
+            ("default", "round_robin", {"seed": 1}),
+            ("rstorm", "rstorm", {}),
         ]
         if name == "star":
             # The paper's Star bottleneck arises from slot-ordered round robin
             # stacking heavy centre tasks on one machine.
             schedulers.insert(
-                1, ("default_node_major", RoundRobinScheduler(seed=1, slot_mode="node_major"))
+                1,
+                ("default_node_major", "round_robin", {"seed": 1, "slot_mode": "node_major"}),
             )
         res = compare_schedulers(lambda: maker(network_bound=False), schedulers)
         baseline = res["default_node_major"] if name == "star" else res["default"]

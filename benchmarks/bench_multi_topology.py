@@ -21,15 +21,10 @@ import math
 import statistics
 from typing import Dict, Tuple
 
-from repro.core import (
-    GlobalState,
-    RoundRobinScheduler,
-    RStormScheduler,
-    emulab_cluster_24,
-)
-from repro.stream import Simulator, topologies
+from repro.api import Nimbus
+from repro.stream import topologies
 
-from .common import emit_csv_row
+from .common import EMULAB_24, emit_csv_row, payload_for
 
 # Representative node-major seed pair (found by scan; reproduces the paper's
 # asymmetry: PageLoad ~66% of R-Storm — paper: 65% — Processing ~zero).
@@ -37,16 +32,18 @@ NODE_MAJOR_SEEDS = (10, 2)
 
 
 def run_pair(mode: str, seeds: Tuple[int, int] = (1, 7)):
-    cl = emulab_cluster_24()
-    gs = GlobalState(cl)
+    nimbus = Nimbus(EMULAB_24)
     pl, pr = topologies.pageload(), topologies.processing()
     if mode == "rstorm":
-        a1 = gs.submit(pl, RStormScheduler())
-        a2 = gs.submit(pr, RStormScheduler())
+        specs = [(pl, "rstorm", {}), (pr, "rstorm", {})]
     else:
-        a1 = gs.submit(pl, RoundRobinScheduler(seed=seeds[0], slot_mode=mode))
-        a2 = gs.submit(pr, RoundRobinScheduler(seed=seeds[1], slot_mode=mode))
-    res = Simulator(cl).run_many([(pl, a1), (pr, a2)])
+        specs = [
+            (pl, "round_robin", {"seed": seeds[0], "slot_mode": mode}),
+            (pr, "round_robin", {"seed": seeds[1], "slot_mode": mode}),
+        ]
+    for topo, name, kwargs in specs:
+        nimbus.submit(payload_for(topo, name, kwargs, EMULAB_24, simulate=False))
+    res = nimbus.simulate_all()
     return res["pageload"], res["processing"]
 
 

@@ -5,16 +5,9 @@ Reports R-Storm vs default-Storm throughput on Linear/Diamond/Star (paper:
 
 from __future__ import annotations
 
-from repro.core import (
-    AnnealedScheduler,
-    RoundRobinScheduler,
-    RStormPlusScheduler,
-    RStormScheduler,
-    emulab_cluster,
-)
 from repro.stream import topologies
 
-from .common import compare_schedulers, emit_csv_row
+from .common import DEFAULT_MATRIX, compare_schedulers, emit_csv_row
 
 PAPER_GAINS = {"linear": 50.0, "diamond": 30.0, "star": 47.0}
 
@@ -22,15 +15,7 @@ PAPER_GAINS = {"linear": 50.0, "diamond": 30.0, "star": 47.0}
 def run() -> list:
     rows = []
     for name, maker in topologies.ALL_MICRO.items():
-        res = compare_schedulers(
-            lambda: maker(network_bound=True),
-            [
-                ("default", RoundRobinScheduler(seed=1)),
-                ("rstorm", RStormScheduler()),
-                ("rstorm_plus", RStormPlusScheduler()),
-                ("rstorm_annealed", AnnealedScheduler(iters=300)),
-            ],
-        )
+        res = compare_schedulers(lambda: maker(network_bound=True), DEFAULT_MATRIX)
         base = res["default"].sink_throughput
         for label in ("rstorm", "rstorm_plus", "rstorm_annealed"):
             gain = (res[label].sink_throughput / max(base, 1e-9) - 1.0) * 100.0

@@ -7,13 +7,7 @@ R-Storm is O(tasks × nodes); we verify the absolute cost stays far below the
 
 from __future__ import annotations
 
-from repro.core import (
-    Cluster,
-    Component,
-    RoundRobinScheduler,
-    RStormScheduler,
-    Topology,
-)
+from repro.core import Cluster, Component, Topology, get_scheduler
 
 from .common import emit_csv_row, timed
 
@@ -43,10 +37,8 @@ def run() -> list:
         cluster = Cluster.homogeneous(
             racks=racks, nodes_per_rack=nodes_per_rack, memory_mb=65536.0, cpu=6400.0
         )
-        for label, sched in (
-            ("rstorm", RStormScheduler()),
-            ("default", RoundRobinScheduler()),
-        ):
+        for label, name in (("rstorm", "rstorm"), ("default", "round_robin")):
+            sched = get_scheduler(name)
             cluster.reset()
             a, secs = timed(lambda: sched.schedule(topo, cluster, commit=False), repeat=2)
             emit_csv_row(

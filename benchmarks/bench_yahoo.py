@@ -6,15 +6,9 @@ Paper: R-Storm outperforms default Storm by ~50% (PageLoad) and ~47%
 
 from __future__ import annotations
 
-from repro.core import (
-    AnnealedScheduler,
-    RoundRobinScheduler,
-    RStormPlusScheduler,
-    RStormScheduler,
-)
 from repro.stream import topologies
 
-from .common import compare_schedulers, emit_csv_row
+from .common import DEFAULT_MATRIX, compare_schedulers, emit_csv_row
 
 PAPER_GAINS = {"pageload": 50.0, "processing": 47.0}
 
@@ -22,15 +16,7 @@ PAPER_GAINS = {"pageload": 50.0, "processing": 47.0}
 def run() -> list:
     rows = []
     for name, maker in topologies.ALL_YAHOO.items():
-        res = compare_schedulers(
-            maker,
-            [
-                ("default", RoundRobinScheduler(seed=1)),
-                ("rstorm", RStormScheduler()),
-                ("rstorm_plus", RStormPlusScheduler()),
-                ("rstorm_annealed", AnnealedScheduler(iters=300)),
-            ],
-        )
+        res = compare_schedulers(maker, DEFAULT_MATRIX)
         base = res["default"].sink_throughput
         for label, r in res.items():
             gain = (r.sink_throughput / max(base, 1e-9) - 1.0) * 100.0

@@ -1,43 +1,72 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+All benchmarks now go through the declarative control plane: a scheduler is
+named by ``(label, registry_name, kwargs)`` rows (scenario-table style) and
+each run is one ``SchedulingPayload`` planned via the ``Nimbus`` facade.
+"""
 
 from __future__ import annotations
 
 import time
 from typing import Callable, Dict, List, Tuple
 
-from repro.core import (
-    Cluster,
-    RoundRobinScheduler,
-    RStormScheduler,
-    Scheduler,
-    emulab_cluster,
+from repro.api import (
+    ClusterSpec,
+    Nimbus,
+    RunSettings,
+    SchedulerSpec,
+    SchedulingPayload,
+    TopologySpec,
 )
-from repro.stream import Simulator
 from repro.core.topology import Topology
+
+#: (label, scheduler registry name, kwargs) — the default comparison matrix.
+DEFAULT_MATRIX: List[Tuple[str, str, dict]] = [
+    ("default", "round_robin", {"seed": 1}),
+    ("rstorm", "rstorm", {}),
+    ("rstorm_plus", "rstorm_plus", {}),
+    ("rstorm_annealed", "rstorm_annealed", {"iters": 300}),
+]
+
+EMULAB_12 = ClusterSpec(preset="emulab_12")
+EMULAB_24 = ClusterSpec(preset="emulab_24")
+
+
+def payload_for(
+    topology: Topology,
+    scheduler_name: str,
+    kwargs: dict | None = None,
+    cluster: ClusterSpec = EMULAB_12,
+    simulate: bool = True,
+) -> SchedulingPayload:
+    return SchedulingPayload(
+        topology=TopologySpec.from_topology(topology),
+        cluster=cluster,
+        scheduler=SchedulerSpec(scheduler_name, dict(kwargs or {})),
+        settings=RunSettings(simulate=simulate),
+    )
 
 
 def schedule_and_simulate(
     topology: Topology,
-    scheduler: Scheduler,
-    cluster: Cluster,
+    scheduler_name: str,
+    kwargs: dict | None = None,
+    cluster: ClusterSpec = EMULAB_12,
 ):
-    cluster.reset()
-    assignment = scheduler.schedule(topology, cluster, commit=False)
-    cluster.reset()
-    sim = Simulator(cluster)
-    return assignment, sim.run(topology, assignment)
+    """Plan (dry-run) one payload and return (plan, plan.sim)."""
+    plan = Nimbus().plan(payload_for(topology, scheduler_name, kwargs, cluster))
+    return plan, plan.sim
 
 
 def compare_schedulers(
     topology_factory: Callable[[], Topology],
-    schedulers: List[Tuple[str, Scheduler]],
-    cluster: Cluster | None = None,
+    schedulers: List[Tuple[str, str, dict]] | None = None,
+    cluster: ClusterSpec = EMULAB_12,
 ) -> Dict[str, object]:
-    cluster = cluster or emulab_cluster()
+    """Run the scheduler matrix over one topology; label -> SimResult."""
     out = {}
-    for label, sched in schedulers:
-        topo = topology_factory()
-        _, res = schedule_and_simulate(topo, sched, cluster)
+    for label, name, kwargs in schedulers or DEFAULT_MATRIX:
+        _, res = schedule_and_simulate(topology_factory(), name, kwargs, cluster)
         out[label] = res
     return out
 

@@ -1,4 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--smoke`` runs the fast pure-Python subset (no jax/kernels, no seed
+# scans) — what CI uses as a quick end-to-end pass over the control plane.
 from __future__ import annotations
 
 import importlib
@@ -15,11 +17,22 @@ BENCHES = [
     "benchmarks.bench_kernels",          # Pallas kernel oracles
 ]
 
+SMOKE_BENCHES = [
+    "benchmarks.bench_network_bound",
+    "benchmarks.bench_yahoo",
+]
+
 
 def main() -> None:
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    unknown = [a for a in args if a != "--smoke"]
+    if unknown:
+        print(f"usage: python -m benchmarks.run [--smoke] (unknown: {unknown})", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failed = []
-    for mod_name in BENCHES:
+    for mod_name in SMOKE_BENCHES if smoke else BENCHES:
         try:
             mod = importlib.import_module(mod_name)
         except Exception:

@@ -1,21 +1,23 @@
-"""Fault-tolerance walkthrough (DESIGN.md §5):
+"""Fault-tolerance walkthrough (DESIGN.md §5), on the Nimbus facade:
 
-1. schedule the Yahoo PageLoad topology with R-Storm;
-2. kill a worker node — the rescheduler re-places only the orphaned tasks;
+1. submit the Yahoo PageLoad topology as a declarative payload;
+2. kill a worker node — ``Nimbus.rebalance()`` re-places only the orphans;
 3. detect and migrate a straggler via the StatisticServer feed;
-4. scale the cluster up elastically and watch unassigned tasks land.
+4. scale the cluster up elastically and watch unassigned tasks land;
+5. kill the topology — its resources return to the cluster.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
 
-from repro.core import (
-    GlobalState,
-    NodeSpec,
-    Rescheduler,
-    RStormScheduler,
-    StragglerMitigator,
-    emulab_cluster,
+from repro.api import (
+    ClusterSpec,
+    Nimbus,
+    RunSettings,
+    SchedulerSpec,
+    SchedulingPayload,
+    TopologySpec,
 )
+from repro.core import NodeSpec, Rescheduler, StragglerMitigator
 from repro.stream import Simulator, topologies
 
 
@@ -30,18 +32,25 @@ def show(sim, topo, assignment, label):
 
 
 def main() -> None:
-    cluster = emulab_cluster()
-    gs = GlobalState(cluster)
-    topo = topologies.pageload()
-    print(f"1) scheduling {topo.id} on {cluster}")
-    assignment = gs.submit(topo, RStormScheduler())
-    sim = Simulator(cluster)
+    payload = SchedulingPayload(
+        topology=TopologySpec.from_topology(topologies.pageload()),
+        cluster=ClusterSpec(preset="emulab_12"),
+        scheduler=SchedulerSpec("rstorm"),
+        settings=RunSettings(allow_partial=True),
+    )
+    nimbus = Nimbus()
+    print(f"1) submitting {payload.topology.id!r} via Nimbus")
+    plan = nimbus.submit(payload)
+    topo, assignment = plan.topology, plan.assignment
+    sim = Simulator(nimbus.cluster)
     show(sim, topo, assignment, "initial")
 
-    victim = assignment.nodes_used()[0]
+    victim = sorted(set(assignment.placements.values()))[0]
     print(f"\n2) node failure: {victim}")
-    resch = Rescheduler(gs)
-    moved = resch.handle_node_failure(victim)
+    nimbus.cluster.fail_node(victim)
+    orphans = nimbus.state.orphaned_tasks()  # (topology_id, task_id) pairs
+    print(f"   orphaned: {[tid for _, tid in orphans]}")
+    moved = nimbus.rebalance()
     print(f"   migrated tasks: {moved.get(topo.id, [])}")
     show(sim, topo, assignment, "after failover")
 
@@ -49,12 +58,13 @@ def main() -> None:
     times = {t.id: 0.002 for t in topo.all_tasks()}
     straggler = next(iter(assignment.placements))
     times[straggler] = 1.0
-    mit = StragglerMitigator(gs)
+    mit = StragglerMitigator(nimbus.state)
     found = mit.find_stragglers(times)
     moves = mit.migrate(found)
     print(f"   detected {found} -> moved to {list(moves.values())}")
 
     print("\n4) elastic scale-up: fail half the cluster, then add a fresh rack")
+    resch = Rescheduler(nimbus.state)
     for nid in list(assignment.nodes_used())[:3]:
         resch.handle_node_failure(nid)
     print(f"   after failures: unassigned={len(assignment.unassigned)}")
@@ -63,6 +73,11 @@ def main() -> None:
     )
     show(sim, topo, assignment, "after scale-up")
     assert assignment.is_complete(topo)
+
+    print("\n5) kill: resources return to the cluster")
+    nimbus.kill(topo.id)
+    free = nimbus.cluster.total_available()["memory_mb"]
+    print(f"   topologies={nimbus.topologies}, free memory={free:.0f} MB")
     print("\nall tasks placed; the plan is a pure function of (topology, cluster).")
 
 

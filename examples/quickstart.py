@@ -1,42 +1,51 @@
-"""Quickstart: schedule the paper's topologies with R-Storm vs default Storm
-and simulate throughput (paper Fig 8/12 in one minute).
+"""Quickstart: the payload-driven control plane.
+
+Schedule the paper's topologies with R-Storm vs default Storm and simulate
+throughput (paper Fig 8/12 in one minute) — every run is one declarative
+``SchedulingPayload`` (dict -> from_dict -> Nimbus.plan), so schedulers,
+clusters and workloads are data, not hand-wired Python.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (
-    RoundRobinScheduler,
-    RStormScheduler,
-    emulab_cluster,
-)
-from repro.stream import Simulator, topologies
+import json
+
+from repro.api import Nimbus, SchedulingPayload
+from repro.stream import topologies
+
+
+def payload_dict(topo_name: str, scheduler: str, kwargs=None, **topo_kwargs) -> dict:
+    """A pure-dict payload: exactly what a JSON/YAML scenario file holds."""
+    return {
+        "topology": topologies.spec(topo_name, **topo_kwargs).to_dict(),
+        "cluster": {"preset": "emulab_12"},
+        "scheduler": {"name": scheduler, "kwargs": dict(kwargs or {})},
+        "settings": {"allow_partial": True, "simulate": True},
+    }
 
 
 def main() -> None:
-    cluster = emulab_cluster()
-    sim = Simulator(cluster)
-    print(f"cluster: {cluster}")
+    nimbus = Nimbus()
     print(f"{'topology':14s} {'default':>12s} {'rstorm':>12s} {'gain':>8s}  binding/machines")
-    for maker in (
-        lambda: topologies.linear(network_bound=True),
-        lambda: topologies.diamond(network_bound=True),
-        lambda: topologies.star(network_bound=True),
-        topologies.pageload,
-        topologies.processing,
+    for name, topo_kwargs in (
+        ("linear", {"network_bound": True}),
+        ("diamond", {"network_bound": True}),
+        ("star", {"network_bound": True}),
+        ("pageload", {}),
+        ("processing", {}),
     ):
-        topo = maker()
-        cluster.reset()
-        rr = RoundRobinScheduler(seed=1).schedule(topo, cluster, commit=False)
-        cluster.reset()
-        rs = RStormScheduler().schedule(topo, cluster, commit=False)
-        cluster.reset()
-        res_rr = sim.run(topo, rr)
-        res_rs = sim.run(topo, rs)
-        gain = (res_rs.sink_throughput / max(res_rr.sink_throughput, 1e-9) - 1) * 100
+        results = {}
+        for sched, kwargs in (("round_robin", {"seed": 1}), ("rstorm", {})):
+            raw = payload_dict(name, sched, kwargs, **topo_kwargs)
+            # Through JSON and back: the payload is lossless, validated data.
+            payload = SchedulingPayload.from_dict(json.loads(json.dumps(raw)))
+            results[sched] = nimbus.plan(payload)  # dry-run: commits nothing
+        rr, rs = results["round_robin"].sim, results["rstorm"].sim
+        gain = (rs.sink_throughput / max(rr.sink_throughput, 1e-9) - 1) * 100
         print(
-            f"{topo.id:14s} {res_rr.sink_throughput:10.0f}/s {res_rs.sink_throughput:10.0f}/s "
-            f"{gain:+7.1f}%  {res_rs.binding}, {res_rs.machines_used} vs "
-            f"{res_rr.machines_used} machines"
+            f"{rs.topology_id:14s} {rr.sink_throughput:10.0f}/s {rs.sink_throughput:10.0f}/s "
+            f"{gain:+7.1f}%  {rs.binding}, {rs.machines_used} vs "
+            f"{rr.machines_used} machines"
         )
     print(
         "\nR-Storm packs communicating tasks onto few machines under the hard"

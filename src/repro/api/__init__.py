@@ -1,0 +1,49 @@
+# Public control-plane surface: one validated SchedulingPayload contract,
+# the pluggable scheduler registry, and the Nimbus submit/plan/kill/rebalance
+# facade.  This is the API new schedulers, clusters and workloads plug into
+# as data rather than code.
+from ..core.registry import (
+    KwargField,
+    REGISTRY,
+    SchedulerEntry,
+    get_scheduler,
+    register_scheduler,
+    scheduler_names,
+    validate_scheduler_kwargs,
+)
+from .errors import PayloadValidationError, UnschedulablePayloadError
+from .nimbus import Nimbus, SchedulingPlan
+from .specs import (
+    CLUSTER_PRESETS,
+    ClusterSpec,
+    ComponentSpec,
+    EdgeSpec,
+    NodeEntry,
+    RunSettings,
+    SchedulerSpec,
+    SchedulingPayload,
+    TopologySpec,
+)
+
+__all__ = [
+    "CLUSTER_PRESETS",
+    "ClusterSpec",
+    "ComponentSpec",
+    "EdgeSpec",
+    "KwargField",
+    "Nimbus",
+    "NodeEntry",
+    "PayloadValidationError",
+    "REGISTRY",
+    "RunSettings",
+    "SchedulerEntry",
+    "SchedulerSpec",
+    "SchedulingPayload",
+    "SchedulingPlan",
+    "TopologySpec",
+    "UnschedulablePayloadError",
+    "get_scheduler",
+    "register_scheduler",
+    "scheduler_names",
+    "validate_scheduler_kwargs",
+]

@@ -1,0 +1,35 @@
+"""Errors raised by the control-plane API."""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+
+class PayloadValidationError(ValueError):
+    """A SchedulingPayload failed upfront validation.
+
+    Carries every problem found (not just the first) as path-tagged,
+    actionable messages, e.g. ``topology.edges[2].dst: unknown component
+    'bollt3' (components: ['bolt3', 'spout'])``.
+    """
+
+    def __init__(self, errors: Sequence[str]):
+        self.errors: List[str] = list(errors)
+        super().__init__(
+            "invalid SchedulingPayload:\n  - " + "\n  - ".join(self.errors)
+        )
+
+
+class UnschedulablePayloadError(RuntimeError):
+    """A valid payload could not be fully placed and the payload's
+    ``RunSettings.allow_partial`` is False.  Raised by ``Nimbus.submit``
+    *before* any cluster mutation — the plan is discarded whole."""
+
+    def __init__(self, topology_id: str, unassigned: Sequence[str]):
+        self.topology_id = topology_id
+        self.unassigned = list(unassigned)
+        super().__init__(
+            f"topology {topology_id!r}: {len(self.unassigned)} task(s) could not "
+            f"be placed ({self.unassigned[:5]}{'...' if len(self.unassigned) > 5 else ''}); "
+            "payload has allow_partial=False, nothing was committed"
+        )

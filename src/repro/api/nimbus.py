@@ -1,0 +1,266 @@
+"""The Nimbus control-plane facade (paper §5: a stateless Nimbus turns a
+declarative topology + cluster description into a placement).
+
+``Nimbus`` wraps ``GlobalState`` behind four verbs:
+
+* ``plan(payload)``   — dry-run: schedule against a scratch copy, commit
+  nothing (the cluster and the global state are untouched);
+* ``submit(payload)`` — plan, then atomically commit (paper §4.1);
+* ``kill(topology_id)`` — remove a topology, returning its resources;
+* ``rebalance()``     — re-place orphaned/unassigned tasks after failures
+  or elastic scale-up.
+
+Both plan and submit return a ``SchedulingPlan`` report: placements,
+unassigned tasks, per-node utilization, network cost and schedule time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Union
+
+from ..core.assignment import Assignment
+from ..core.cluster import Cluster
+from ..core.multitopology import GlobalState
+from ..core.registry import get_scheduler
+from ..core.rescheduler import Rescheduler
+from ..core.resources import BANDWIDTH, CPU, MEMORY
+from ..core.topology import Topology
+from .errors import PayloadValidationError, UnschedulablePayloadError
+from .specs import ClusterSpec, SchedulingPayload
+
+
+@dataclasses.dataclass
+class SchedulingPlan:
+    """What the control plane decided for one payload."""
+
+    topology_id: str
+    scheduler_name: str
+    committed: bool
+    placements: Dict[str, str]
+    unassigned: List[str]
+    network_cost: float
+    schedule_time_s: float
+    #: node -> {memory_mb, cpu_points, bandwidth} fraction of that node's
+    #: capacity consumed by *this* topology.
+    node_utilization: Dict[str, Dict[str, float]]
+    sim: Optional[Any] = None  # stream.simulator.SimResult when requested
+    # Live objects for downstream tooling (not part of the dict form).
+    assignment: Optional[Assignment] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    topology: Optional[Topology] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def machines_used(self) -> int:
+        return len(set(self.placements.values()))
+
+    def is_complete(self) -> bool:
+        return not self.unassigned
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = {
+            "topology_id": self.topology_id,
+            "scheduler_name": self.scheduler_name,
+            "committed": self.committed,
+            "placements": dict(self.placements),
+            "unassigned": list(self.unassigned),
+            "network_cost": self.network_cost,
+            "schedule_time_s": self.schedule_time_s,
+            "node_utilization": {
+                nid: dict(dims) for nid, dims in self.node_utilization.items()
+            },
+            "machines_used": self.machines_used,
+        }
+        if self.sim is not None:
+            out["sim"] = {
+                "sink_throughput": self.sim.sink_throughput,
+                "binding": self.sim.binding,
+                "latency_s": self.sim.latency_s,
+                "machines_used": self.sim.machines_used,
+                "avg_cpu_utilization": self.sim.avg_cpu_utilization,
+            }
+        return out
+
+    @classmethod
+    def from_assignment(
+        cls,
+        assignment: Assignment,
+        topology: Topology,
+        cluster: Cluster,
+        committed: bool,
+        sim: Optional[Any] = None,
+    ) -> "SchedulingPlan":
+        used: Dict[str, Dict[str, float]] = {}
+        demands = {t.id: topology.demand_of(t) for t in topology.all_tasks()}
+        for tid, nid in assignment.placements.items():
+            acc = used.setdefault(nid, {MEMORY: 0.0, CPU: 0.0, BANDWIDTH: 0.0})
+            d = demands[tid]
+            for dim in acc:
+                acc[dim] += d[dim]
+        utilization = {}
+        for nid, dims in used.items():
+            cap = cluster.nodes[nid].capacity
+            utilization[nid] = {
+                dim: (use / cap[dim] if cap[dim] > 0 else 0.0)
+                for dim, use in dims.items()
+            }
+        return cls(
+            topology_id=topology.id,
+            scheduler_name=assignment.scheduler_name,
+            committed=committed,
+            placements=dict(assignment.placements),
+            unassigned=list(assignment.unassigned),
+            network_cost=assignment.network_cost(topology, cluster),
+            schedule_time_s=assignment.schedule_time_s,
+            node_utilization=utilization,
+            sim=sim,
+            assignment=assignment,
+            topology=topology,
+        )
+
+
+class Nimbus:
+    """Unified submit/plan/kill/rebalance facade over ``GlobalState``.
+
+    The cluster is established either at construction (a ``ClusterSpec`` or
+    a live ``Cluster``) or lazily from the first *submitted* payload —
+    ``plan`` on an empty Nimbus stays fully stateless.  Once a cluster is
+    live, payloads whose ``ClusterSpec`` does not describe it are rejected —
+    the payload is self-contained, so silent mismatch would mean the caller
+    is scheduling against an environment other than the one they declared.
+    """
+
+    def __init__(self, cluster: Union[Cluster, ClusterSpec, None] = None):
+        self._cluster_spec: Optional[ClusterSpec] = None
+        if isinstance(cluster, ClusterSpec):
+            errors = cluster.validate("cluster")
+            if errors:
+                raise PayloadValidationError(errors)
+            self._cluster_spec = cluster
+            cluster = cluster.to_cluster()
+        elif cluster is not None:
+            # Record the spec of a caller-supplied live cluster so payload
+            # mismatch checking works on this construction path too.
+            self._cluster_spec = ClusterSpec.from_cluster(cluster)
+        self.state: Optional[GlobalState] = (
+            GlobalState(cluster) if cluster is not None else None
+        )
+
+    # -- introspection -----------------------------------------------------------
+    @property
+    def cluster(self) -> Optional[Cluster]:
+        return self.state.cluster if self.state is not None else None
+
+    @property
+    def topologies(self) -> List[str]:
+        return sorted(self.state.topologies) if self.state is not None else []
+
+    # -- internals ---------------------------------------------------------------
+    def _prepare(self, payload: SchedulingPayload, *, persist: bool):
+        """Validate everything and materialize objects — no mutation on error.
+
+        ``persist`` controls whether an empty Nimbus adopts the payload's
+        cluster as its live one (submit) or materializes a throwaway copy
+        (plan, which must stay side-effect free)."""
+        payload.validate()
+        topology = payload.topology.to_topology()
+        scheduler = get_scheduler(payload.scheduler.name, **payload.scheduler.kwargs)
+        if self.state is None:
+            cluster = payload.cluster.to_cluster()
+            if persist:
+                self._cluster_spec = payload.cluster
+                self.state = GlobalState(cluster)
+        else:
+            # Fast path: identical spec.  Slow path: semantically equivalent
+            # (e.g. a preset vs the explicit node list it expands to).
+            if payload.cluster != self._cluster_spec and not payload.cluster.describes(
+                self.state.cluster
+            ):
+                raise PayloadValidationError(
+                    [
+                        "cluster: payload cluster spec does not match the cluster "
+                        f"this Nimbus is managing ({len(self.state.cluster.nodes)} "
+                        "nodes); submit to a fresh Nimbus or reuse the original spec"
+                    ]
+                )
+            cluster = self.state.cluster
+        return topology, scheduler, cluster
+
+    def _simulate(self, topology: Topology, assignment: Assignment, cluster: Cluster):
+        from ..stream.simulator import Simulator  # local: stream imports api
+
+        return Simulator(cluster).run(topology, assignment)
+
+    # -- verbs -------------------------------------------------------------------
+    def plan(self, payload: SchedulingPayload) -> SchedulingPlan:
+        """Dry-run scheduling: neither the cluster nor GlobalState changes
+        (an empty Nimbus stays empty — nothing is pinned by planning)."""
+        topology, scheduler, cluster = self._prepare(payload, persist=False)
+        assignment = scheduler.schedule(topology, cluster, commit=False)
+        sim = (
+            self._simulate(topology, assignment, cluster)
+            if payload.settings.simulate
+            else None
+        )
+        return SchedulingPlan.from_assignment(
+            assignment, topology, cluster, committed=False, sim=sim
+        )
+
+    def submit(self, payload: SchedulingPayload) -> SchedulingPlan:
+        """Plan, then atomically commit onto the live cluster.
+
+        A payload that fails validation, collides with a submitted topology
+        id, or (with ``allow_partial=False``) cannot be fully placed is
+        rejected before any cluster mutation.
+        """
+        topology, scheduler, cluster = self._prepare(payload, persist=True)
+        if topology.id in self.state.topologies:
+            raise PayloadValidationError(
+                [
+                    f"topology.id: {topology.id!r} is already submitted; "
+                    "kill it first or choose a different id"
+                ]
+            )
+        assignment = scheduler.schedule(topology, cluster, commit=False)
+        if assignment.unassigned and not payload.settings.allow_partial:
+            raise UnschedulablePayloadError(topology.id, assignment.unassigned)
+        self.state.commit(topology, assignment)
+        sim = (
+            self._simulate(topology, assignment, cluster)
+            if payload.settings.simulate
+            else None
+        )
+        return SchedulingPlan.from_assignment(
+            assignment, topology, cluster, committed=True, sim=sim
+        )
+
+    def kill(self, topology_id: str) -> Assignment:
+        """Remove a submitted topology, returning its resources to the cluster."""
+        if self.state is None or topology_id not in self.state.topologies:
+            raise KeyError(
+                f"unknown topology {topology_id!r}; submitted: {self.topologies}"
+            )
+        return self.state.kill(topology_id)
+
+    def rebalance(self, weights=None) -> Dict[str, List[str]]:
+        """Re-place orphaned (dead-node) and unassigned tasks.
+
+        Returns per-topology lists of task ids that were moved."""
+        if self.state is None:
+            return {}
+        return Rescheduler(self.state, weights).rebalance()
+
+    def simulate_all(self) -> Dict[str, Any]:
+        """Joint steady-state simulation of every committed topology (§6.5)."""
+        from ..stream.simulator import Simulator
+
+        if self.state is None or not self.state.topologies:
+            return {}
+        pairs = [
+            (self.state.topologies[tid], self.state.assignments[tid])
+            for tid in sorted(self.state.topologies)
+        ]
+        return Simulator(self.state.cluster).run_many(pairs)

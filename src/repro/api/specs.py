@@ -1,0 +1,744 @@
+"""Declarative control-plane contract: one validated SchedulingPayload.
+
+Modeled on AsyncFlow's ``SimulationPayload`` design: a single self-contained
+input object joining the workload (``TopologySpec``), the environment
+(``ClusterSpec``), the policy (``SchedulerSpec``) and ``RunSettings`` — with
+strict upfront validation and a lossless dict/JSON round-trip, so whole
+scheduling scenarios become data, not hand-wired Python.
+
+Every validation problem is reported (not just the first) with a path-tagged,
+actionable message, and a malformed payload is always rejected before any
+cluster state is touched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from ..core.cluster import Cluster, NodeSpec, emulab_cluster, emulab_cluster_24
+from ..core.registry import validate_scheduler_kwargs
+from ..core.topology import Component, Topology
+from .errors import PayloadValidationError
+
+_GROUPINGS = ("shuffle", "local_or_shuffle")
+
+#: Named cluster presets (the paper's Emulab environments, §6.1 / §6.5).
+CLUSTER_PRESETS = {
+    "emulab_12": emulab_cluster,
+    "emulab_24": emulab_cluster_24,
+}
+
+
+# -- parsing helpers -----------------------------------------------------------
+
+_MISSING = object()
+
+
+def _check_keys(
+    d: Mapping, path: str, allowed: Tuple[str, ...], errors: List[str]
+) -> None:
+    unknown = sorted(set(d) - set(allowed))
+    if unknown:
+        errors.append(f"{path}: unknown key(s) {unknown}; allowed: {sorted(allowed)}")
+
+
+def _get(
+    d: Mapping,
+    key: str,
+    types: Tuple[type, ...],
+    path: str,
+    errors: List[str],
+    default: Any = _MISSING,
+    allow_none: bool = False,
+):
+    """Fetch + type-check one key; coerce int->float where float is expected."""
+    if key not in d:
+        if default is _MISSING:
+            errors.append(f"{path}.{key}: required key missing")
+            return None
+        return default
+    value = d[key]
+    if value is None and allow_none:
+        return None
+    if isinstance(value, bool) and bool not in types:
+        errors.append(f"{path}.{key}: expected {_names(types)}, got bool ({value!r})")
+        return default if default is not _MISSING else None
+    if isinstance(value, int) and float in types and int not in types:
+        value = float(value)
+    if not isinstance(value, types):
+        errors.append(
+            f"{path}.{key}: expected {_names(types)}, got "
+            f"{type(value).__name__} ({value!r})"
+        )
+        return default if default is not _MISSING else None
+    return value
+
+
+def _names(types: Tuple[type, ...]) -> str:
+    return "|".join(t.__name__ for t in types)
+
+
+def _require_mapping(obj: Any, path: str) -> Dict:
+    if not isinstance(obj, Mapping):
+        raise PayloadValidationError(
+            [f"{path}: expected a mapping, got {type(obj).__name__}"]
+        )
+    return dict(obj)
+
+
+# -- component / edge / topology ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentSpec:
+    """One spout/bolt: parallelism + per-instance resource loads (paper §5.2)."""
+
+    id: str
+    is_spout: bool = False
+    parallelism: int = 1
+    memory_load_mb: float = 128.0
+    cpu_load: float = 10.0
+    bandwidth_load: float = 0.0
+    emit_ratio: float = 1.0
+    tuple_bytes: float = 100.0
+    cpu_cost_per_tuple: Optional[float] = None
+    max_rate_per_task: Optional[float] = None
+
+    _FIELDS = (
+        "id",
+        "is_spout",
+        "parallelism",
+        "memory_load_mb",
+        "cpu_load",
+        "bandwidth_load",
+        "emit_ratio",
+        "tuple_bytes",
+        "cpu_cost_per_tuple",
+        "max_rate_per_task",
+    )
+
+    def validate(self, path: str) -> List[str]:
+        errors: List[str] = []
+        if not isinstance(self.id, str) or not self.id:
+            errors.append(f"{path}.id: must be a non-empty string, got {self.id!r}")
+        if not isinstance(self.parallelism, int) or self.parallelism < 1:
+            errors.append(
+                f"{path}.parallelism: must be an int >= 1, got {self.parallelism!r}"
+            )
+        for name in ("memory_load_mb", "cpu_load", "bandwidth_load", "emit_ratio", "tuple_bytes"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"{path}.{name}: must be a number >= 0, got {v!r}")
+        for name in ("cpu_cost_per_tuple", "max_rate_per_task"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, (int, float)) or v <= 0):
+                errors.append(f"{path}.{name}: must be null or a number > 0, got {v!r}")
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "ComponentSpec":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            id=_get(d, "id", (str,), path, errors, default=""),
+            is_spout=_get(d, "is_spout", (bool,), path, errors, default=False),
+            parallelism=_get(d, "parallelism", (int,), path, errors, default=1),
+            memory_load_mb=_get(d, "memory_load_mb", (float,), path, errors, default=128.0),
+            cpu_load=_get(d, "cpu_load", (float,), path, errors, default=10.0),
+            bandwidth_load=_get(d, "bandwidth_load", (float,), path, errors, default=0.0),
+            emit_ratio=_get(d, "emit_ratio", (float,), path, errors, default=1.0),
+            tuple_bytes=_get(d, "tuple_bytes", (float,), path, errors, default=100.0),
+            cpu_cost_per_tuple=_get(
+                d, "cpu_cost_per_tuple", (float,), path, errors, default=None, allow_none=True
+            ),
+            max_rate_per_task=_get(
+                d, "max_rate_per_task", (float,), path, errors, default=None, allow_none=True
+            ),
+        )
+
+    def to_component(self) -> Component:
+        comp = Component(
+            self.id,
+            is_spout=self.is_spout,
+            parallelism=self.parallelism,
+            emit_ratio=self.emit_ratio,
+            tuple_bytes=self.tuple_bytes,
+            cpu_cost_per_tuple=self.cpu_cost_per_tuple,
+            max_rate_per_task=self.max_rate_per_task,
+        )
+        comp.set_memory_load(self.memory_load_mb)
+        comp.set_cpu_load(self.cpu_load)
+        comp.set_bandwidth_load(self.bandwidth_load)
+        return comp
+
+    @classmethod
+    def from_component(cls, comp: Component) -> "ComponentSpec":
+        return cls(
+            id=comp.id,
+            is_spout=comp.is_spout,
+            parallelism=comp.parallelism,
+            memory_load_mb=comp.memory_load,
+            cpu_load=comp.cpu_load,
+            bandwidth_load=comp.bandwidth_load,
+            emit_ratio=comp.emit_ratio,
+            tuple_bytes=comp.tuple_bytes,
+            cpu_cost_per_tuple=comp.cpu_cost_per_tuple,
+            max_rate_per_task=comp.max_rate_per_task,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSpec:
+    """A directed stream edge with its Storm grouping."""
+
+    src: str
+    dst: str
+    grouping: str = "shuffle"
+
+    _FIELDS = ("src", "dst", "grouping")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"src": self.src, "dst": self.dst, "grouping": self.grouping}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "EdgeSpec":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            src=_get(d, "src", (str,), path, errors, default=""),
+            dst=_get(d, "dst", (str,), path, errors, default=""),
+            grouping=_get(d, "grouping", (str,), path, errors, default="shuffle"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """The declarative form of a Storm topology DAG."""
+
+    id: str
+    components: Tuple[ComponentSpec, ...]
+    edges: Tuple[EdgeSpec, ...] = ()
+    max_spout_pending: int = 1000
+    acked: bool = True
+
+    _FIELDS = ("id", "components", "edges", "max_spout_pending", "acked")
+
+    def validate(self, path: str = "topology") -> List[str]:
+        errors: List[str] = []
+        if not isinstance(self.id, str) or not self.id:
+            errors.append(f"{path}.id: must be a non-empty string, got {self.id!r}")
+        if not self.components:
+            errors.append(f"{path}.components: at least one component required")
+        seen: set = set()
+        for i, comp in enumerate(self.components):
+            errors.extend(comp.validate(f"{path}.components[{i}]"))
+            if comp.id in seen:
+                errors.append(
+                    f"{path}.components[{i}].id: duplicate component id {comp.id!r}"
+                )
+            seen.add(comp.id)
+        known = sorted(seen)
+        if self.components and not any(c.is_spout for c in self.components):
+            errors.append(f"{path}.components: topology has no spout")
+        if not isinstance(self.max_spout_pending, int) or self.max_spout_pending < 1:
+            errors.append(
+                f"{path}.max_spout_pending: must be an int >= 1, "
+                f"got {self.max_spout_pending!r}"
+            )
+        seen_edges: set = set()
+        adj: Dict[str, List[str]] = {cid: [] for cid in known}
+        for i, e in enumerate(self.edges):
+            epath = f"{path}.edges[{i}]"
+            for end in ("src", "dst"):
+                cid = getattr(e, end)
+                if cid not in seen:
+                    errors.append(
+                        f"{epath}.{end}: unknown component {cid!r} (components: {known})"
+                    )
+            if e.src == e.dst:
+                errors.append(f"{epath}: self-loop {e.src!r} -> {e.dst!r} is not a valid stream")
+            if e.grouping not in _GROUPINGS:
+                errors.append(
+                    f"{epath}.grouping: unknown grouping {e.grouping!r}; "
+                    f"allowed: {list(_GROUPINGS)}"
+                )
+            if (e.src, e.dst) in seen_edges:
+                errors.append(f"{epath}: duplicate edge {e.src!r} -> {e.dst!r}")
+            seen_edges.add((e.src, e.dst))
+            if e.src in adj and e.dst in adj and e.src != e.dst:
+                adj[e.src].append(e.dst)
+        if not errors:
+            errors.extend(self._validate_graph(path, adj))
+        return errors
+
+    def _validate_graph(self, path: str, adj: Dict[str, List[str]]) -> List[str]:
+        """Cycle + reachability checks (the simulator requires a DAG and the
+        scheduler's BFS traversal requires spout-reachability)."""
+        errors: List[str] = []
+        indeg = {cid: 0 for cid in adj}
+        for srcs in adj.values():
+            for dst in srcs:
+                indeg[dst] += 1
+        frontier = sorted(cid for cid, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while frontier:
+            cid = frontier.pop(0)
+            order.append(cid)
+            for dst in adj[cid]:
+                indeg[dst] -= 1
+                if indeg[dst] == 0:
+                    frontier.append(dst)
+        if len(order) != len(adj):
+            cyclic = sorted(set(adj) - set(order))
+            errors.append(
+                f"{path}.edges: cycle detected involving components {cyclic}; "
+                "topologies must be DAGs"
+            )
+            return errors
+        reached = {c.id for c in self.components if c.is_spout}
+        frontier = sorted(reached)
+        while frontier:
+            nxt = []
+            for cid in frontier:
+                for dst in adj.get(cid, []):
+                    if dst not in reached:
+                        reached.add(dst)
+                        nxt.append(dst)
+            frontier = nxt
+        unreachable = sorted(set(adj) - reached)
+        if unreachable:
+            errors.append(
+                f"{path}: components unreachable from any spout: {unreachable}; "
+                "the topology graph is disconnected"
+            )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "id": self.id,
+            "components": [c.to_dict() for c in self.components],
+            "edges": [e.to_dict() for e in self.edges],
+            "max_spout_pending": self.max_spout_pending,
+            "acked": self.acked,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "TopologySpec":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        raw_components = _get(d, "components", (list, tuple), path, errors, default=())
+        raw_edges = _get(d, "edges", (list, tuple), path, errors, default=())
+        components = tuple(
+            ComponentSpec.from_dict(c, f"{path}.components[{i}]", errors)
+            for i, c in enumerate(raw_components or ())
+        )
+        edges = tuple(
+            EdgeSpec.from_dict(e, f"{path}.edges[{i}]", errors)
+            for i, e in enumerate(raw_edges or ())
+        )
+        return cls(
+            id=_get(d, "id", (str,), path, errors, default=""),
+            components=components,
+            edges=edges,
+            max_spout_pending=_get(d, "max_spout_pending", (int,), path, errors, default=1000),
+            acked=_get(d, "acked", (bool,), path, errors, default=True),
+        )
+
+    def to_topology(self) -> Topology:
+        topo = Topology(self.id)
+        for comp in self.components:
+            topo.add_component(comp.to_component())
+        for e in self.edges:
+            topo.add_edge(e.src, e.dst, grouping=e.grouping)
+        topo.max_spout_pending = self.max_spout_pending
+        topo.acked = self.acked
+        return topo
+
+    @classmethod
+    def from_topology(cls, topology: Topology) -> "TopologySpec":
+        """Lossless capture of a builder-made Topology as data."""
+        return cls(
+            id=topology.id,
+            components=tuple(
+                ComponentSpec.from_component(c) for c in topology.components.values()
+            ),
+            edges=tuple(
+                EdgeSpec(src, dst, topology.groupings.get((src, dst), "shuffle"))
+                for src, dst in topology.edges
+            ),
+            max_spout_pending=topology.max_spout_pending,
+            acked=topology.acked,
+        )
+
+
+# -- cluster ------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeEntry:
+    """One worker node in an explicit ClusterSpec."""
+
+    node_id: str
+    rack_id: str
+    cpu_capacity: float = 100.0
+    memory_capacity_mb: float = 2048.0
+    bandwidth_capacity: float = 100.0
+    num_worker_slots: int = 4
+
+    _FIELDS = (
+        "node_id",
+        "rack_id",
+        "cpu_capacity",
+        "memory_capacity_mb",
+        "bandwidth_capacity",
+        "num_worker_slots",
+    )
+
+    def validate(self, path: str) -> List[str]:
+        errors: List[str] = []
+        for name in ("node_id", "rack_id"):
+            v = getattr(self, name)
+            if not isinstance(v, str) or not v:
+                errors.append(f"{path}.{name}: must be a non-empty string, got {v!r}")
+        for name in ("cpu_capacity", "memory_capacity_mb", "bandwidth_capacity"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, float)) or v <= 0:
+                errors.append(f"{path}.{name}: must be a number > 0, got {v!r}")
+        if not isinstance(self.num_worker_slots, int) or self.num_worker_slots < 1:
+            errors.append(
+                f"{path}.num_worker_slots: must be an int >= 1, "
+                f"got {self.num_worker_slots!r}"
+            )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "NodeEntry":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            node_id=_get(d, "node_id", (str,), path, errors, default=""),
+            rack_id=_get(d, "rack_id", (str,), path, errors, default=""),
+            cpu_capacity=_get(d, "cpu_capacity", (float,), path, errors, default=100.0),
+            memory_capacity_mb=_get(
+                d, "memory_capacity_mb", (float,), path, errors, default=2048.0
+            ),
+            bandwidth_capacity=_get(
+                d, "bandwidth_capacity", (float,), path, errors, default=100.0
+            ),
+            num_worker_slots=_get(d, "num_worker_slots", (int,), path, errors, default=4),
+        )
+
+    def to_node_spec(self) -> NodeSpec:
+        return NodeSpec(
+            node_id=self.node_id,
+            rack_id=self.rack_id,
+            cpu_capacity=self.cpu_capacity,
+            memory_capacity_mb=self.memory_capacity_mb,
+            bandwidth_capacity=self.bandwidth_capacity,
+            num_worker_slots=self.num_worker_slots,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Declarative cluster description, in exactly one of three forms:
+
+    * ``preset`` — a named environment (``emulab_12``, ``emulab_24``);
+    * homogeneous — ``racks`` x ``nodes_per_rack`` identical nodes;
+    * explicit — a full ``nodes`` list.
+    """
+
+    preset: Optional[str] = None
+    nodes: Tuple[NodeEntry, ...] = ()
+    racks: Optional[int] = None
+    nodes_per_rack: Optional[int] = None
+    cpu: float = 100.0
+    memory_mb: float = 2048.0
+    bandwidth: float = 100.0
+    slots: int = 4
+
+    _HOMOGENEOUS_FIELDS = ("racks", "nodes_per_rack", "cpu", "memory_mb", "bandwidth", "slots")
+
+    def mode(self) -> str:
+        modes = []
+        if self.preset is not None:
+            modes.append("preset")
+        if self.nodes:
+            modes.append("explicit")
+        if self.racks is not None or self.nodes_per_rack is not None:
+            modes.append("homogeneous")
+        if len(modes) != 1:
+            return "ambiguous" if modes else "empty"
+        return modes[0]
+
+    def validate(self, path: str = "cluster") -> List[str]:
+        errors: List[str] = []
+        mode = self.mode()
+        if mode == "empty":
+            return [
+                f"{path}: must set exactly one of 'preset', 'nodes', or "
+                "'racks'+'nodes_per_rack'"
+            ]
+        if mode == "ambiguous":
+            return [
+                f"{path}: 'preset', 'nodes' and 'racks'/'nodes_per_rack' are "
+                "mutually exclusive; set exactly one form"
+            ]
+        if mode == "preset":
+            if self.preset not in CLUSTER_PRESETS:
+                errors.append(
+                    f"{path}.preset: unknown preset {self.preset!r}; "
+                    f"available: {sorted(CLUSTER_PRESETS)}"
+                )
+        elif mode == "explicit":
+            seen: set = set()
+            for i, node in enumerate(self.nodes):
+                errors.extend(node.validate(f"{path}.nodes[{i}]"))
+                if node.node_id in seen:
+                    errors.append(
+                        f"{path}.nodes[{i}].node_id: duplicate node id {node.node_id!r}"
+                    )
+                seen.add(node.node_id)
+        else:  # homogeneous
+            for name in ("racks", "nodes_per_rack"):
+                v = getattr(self, name)
+                if not isinstance(v, int) or v < 1:
+                    errors.append(f"{path}.{name}: must be an int >= 1, got {v!r}")
+            for name in ("cpu", "memory_mb", "bandwidth"):
+                v = getattr(self, name)
+                if not isinstance(v, (int, float)) or v <= 0:
+                    errors.append(f"{path}.{name}: must be a number > 0, got {v!r}")
+            if not isinstance(self.slots, int) or self.slots < 1:
+                errors.append(f"{path}.slots: must be an int >= 1, got {self.slots!r}")
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        mode = self.mode()
+        if mode == "preset":
+            return {"preset": self.preset}
+        if mode == "explicit":
+            return {"nodes": [n.to_dict() for n in self.nodes]}
+        return {
+            "racks": self.racks,
+            "nodes_per_rack": self.nodes_per_rack,
+            "cpu": self.cpu,
+            "memory_mb": self.memory_mb,
+            "bandwidth": self.bandwidth,
+            "slots": self.slots,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "ClusterSpec":
+        d = dict(_require_mapping(d, path))
+        if "preset" in d:
+            _check_keys(d, path, ("preset",), errors)
+            return cls(preset=_get(d, "preset", (str,), path, errors, default=""))
+        if "nodes" in d:
+            _check_keys(d, path, ("nodes",), errors)
+            raw = _get(d, "nodes", (list, tuple), path, errors, default=())
+            return cls(
+                nodes=tuple(
+                    NodeEntry.from_dict(n, f"{path}.nodes[{i}]", errors)
+                    for i, n in enumerate(raw or ())
+                )
+            )
+        _check_keys(d, path, cls._HOMOGENEOUS_FIELDS, errors)
+        if not d:
+            errors.append(
+                f"{path}: must set exactly one of 'preset', 'nodes', or "
+                "'racks'+'nodes_per_rack'"
+            )
+            return cls()
+        return cls(
+            racks=_get(d, "racks", (int,), path, errors, default=None, allow_none=True),
+            nodes_per_rack=_get(
+                d, "nodes_per_rack", (int,), path, errors, default=None, allow_none=True
+            ),
+            cpu=_get(d, "cpu", (float,), path, errors, default=100.0),
+            memory_mb=_get(d, "memory_mb", (float,), path, errors, default=2048.0),
+            bandwidth=_get(d, "bandwidth", (float,), path, errors, default=100.0),
+            slots=_get(d, "slots", (int,), path, errors, default=4),
+        )
+
+    def to_cluster(self) -> Cluster:
+        mode = self.mode()
+        if mode == "preset":
+            return CLUSTER_PRESETS[self.preset]()
+        if mode == "explicit":
+            return Cluster([n.to_node_spec() for n in self.nodes])
+        return Cluster.homogeneous(
+            racks=self.racks,
+            nodes_per_rack=self.nodes_per_rack,
+            cpu=self.cpu,
+            memory_mb=self.memory_mb,
+            bandwidth=self.bandwidth,
+            slots=self.slots,
+        )
+
+    def describes(self, cluster: Cluster) -> bool:
+        """True if this spec materializes to exactly ``cluster``'s node set —
+        the semantic equivalence check (a preset and the explicit node list it
+        expands to describe the same cluster)."""
+        want = {n.spec.node_id: n.spec for n in self.to_cluster().nodes.values()}
+        have = {nid: n.spec for nid, n in cluster.nodes.items()}
+        return want == have
+
+    @classmethod
+    def from_cluster(cls, cluster: Cluster) -> "ClusterSpec":
+        """Capture a live Cluster as an explicit node list."""
+        return cls(
+            nodes=tuple(
+                NodeEntry(
+                    node_id=n.spec.node_id,
+                    rack_id=n.spec.rack_id,
+                    cpu_capacity=n.spec.cpu_capacity,
+                    memory_capacity_mb=n.spec.memory_capacity_mb,
+                    bandwidth_capacity=n.spec.bandwidth_capacity,
+                    num_worker_slots=n.spec.num_worker_slots,
+                )
+                for n in cluster.nodes.values()
+            )
+        )
+
+
+# -- scheduler / settings / payload ---------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec:
+    """A scheduler by registry name + constructor kwargs (validated against
+    the scheduler's registered kwargs schema before instantiation)."""
+
+    name: str
+    kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    _FIELDS = ("name", "kwargs")
+
+    def validate(self, path: str = "scheduler") -> List[str]:
+        if not isinstance(self.name, str) or not self.name:
+            return [f"{path}.name: must be a non-empty string, got {self.name!r}"]
+        if not isinstance(self.kwargs, Mapping):
+            return [
+                f"{path}.kwargs: expected a mapping, got {type(self.kwargs).__name__}"
+            ]
+        return validate_scheduler_kwargs(self.name, self.kwargs, path=path)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "kwargs": dict(self.kwargs)}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "SchedulerSpec":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        kwargs = _get(d, "kwargs", (dict,), path, errors, default={})
+        return cls(
+            name=_get(d, "name", (str,), path, errors, default=""),
+            kwargs=dict(kwargs or {}),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSettings:
+    """Per-submission knobs.
+
+    ``allow_partial`` — accept plans with unassigned tasks (False makes
+    ``Nimbus.submit`` reject an incomplete plan before any mutation).
+    ``simulate`` — attach a steady-state throughput SimResult to the plan.
+    """
+
+    allow_partial: bool = True
+    simulate: bool = False
+
+    _FIELDS = ("allow_partial", "simulate")
+
+    def validate(self, path: str = "settings") -> List[str]:
+        errors: List[str] = []
+        for name in self._FIELDS:
+            v = getattr(self, name)
+            if not isinstance(v, bool):
+                errors.append(f"{path}.{name}: must be a bool, got {v!r}")
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"allow_partial": self.allow_partial, "simulate": self.simulate}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "RunSettings":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            allow_partial=_get(d, "allow_partial", (bool,), path, errors, default=True),
+            simulate=_get(d, "simulate", (bool,), path, errors, default=False),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulingPayload:
+    """The full, self-contained input of one scheduling request."""
+
+    topology: TopologySpec
+    cluster: ClusterSpec
+    scheduler: SchedulerSpec
+    settings: RunSettings = dataclasses.field(default_factory=RunSettings)
+
+    _FIELDS = ("topology", "cluster", "scheduler", "settings")
+
+    def validate(self) -> "SchedulingPayload":
+        """Raise PayloadValidationError listing *all* problems, or return self."""
+        errors: List[str] = []
+        errors.extend(self.topology.validate("topology"))
+        errors.extend(self.cluster.validate("cluster"))
+        errors.extend(self.scheduler.validate("scheduler"))
+        errors.extend(self.settings.validate("settings"))
+        if errors:
+            raise PayloadValidationError(errors)
+        return self
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "topology": self.topology.to_dict(),
+            "cluster": self.cluster.to_dict(),
+            "scheduler": self.scheduler.to_dict(),
+            "settings": self.settings.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Any) -> "SchedulingPayload":
+        """Parse + fully validate a pure-dict payload.
+
+        Raises PayloadValidationError (with every problem found) on any
+        structural or semantic error; the returned payload is guaranteed
+        valid and round-trips losslessly through ``to_dict``.
+        """
+        d = _require_mapping(d, "payload")
+        errors: List[str] = []
+        _check_keys(d, "payload", cls._FIELDS, errors)
+        for key in ("topology", "cluster", "scheduler"):
+            if key not in d:
+                errors.append(f"payload.{key}: required key missing")
+        if errors and any("required key missing" in e for e in errors):
+            raise PayloadValidationError(errors)
+        payload = cls(
+            topology=TopologySpec.from_dict(d["topology"], "topology", errors),
+            cluster=ClusterSpec.from_dict(d["cluster"], "cluster", errors),
+            scheduler=SchedulerSpec.from_dict(d["scheduler"], "scheduler", errors),
+            settings=RunSettings.from_dict(
+                d.get("settings", {}), "settings", errors
+            ),
+        )
+        if errors:
+            # Best-effort semantic pass over the partially-parsed payload so
+            # the caller sees e.g. a cycle *and* the bad kwarg in one shot.
+            try:
+                payload.validate()
+            except PayloadValidationError as semantic:
+                errors.extend(e for e in semantic.errors if e not in errors)
+            raise PayloadValidationError(errors)
+        return payload.validate()

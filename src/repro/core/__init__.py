@@ -23,6 +23,14 @@ from .schedulers import (
     Scheduler,
     get_scheduler,
 )
+from .registry import (
+    REGISTRY,
+    KwargField,
+    SchedulerEntry,
+    register_scheduler,
+    scheduler_names,
+    validate_scheduler_kwargs,
+)
 from .multitopology import GlobalState
 from .rescheduler import Rescheduler, StragglerMitigator
 
@@ -51,6 +59,12 @@ __all__ = [
     "RStormPlusScheduler",
     "AnnealedScheduler",
     "SCHEDULERS",
+    "REGISTRY",
+    "KwargField",
+    "SchedulerEntry",
+    "register_scheduler",
+    "scheduler_names",
+    "validate_scheduler_kwargs",
     "get_scheduler",
     "GlobalState",
     "Rescheduler",

@@ -8,7 +8,7 @@ explicit, reconstructible value.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .assignment import Assignment
 from .cluster import Cluster
@@ -31,12 +31,23 @@ class GlobalState:
         """
         if topology.id in self.topologies:
             raise ValueError(f"topology {topology.id!r} already submitted")
-        assignment = scheduler.schedule(topology, self.cluster, commit=True)
+        assignment = scheduler.schedule(topology, self.cluster, commit=False)
+        return self.commit(topology, assignment)
+
+    def commit(self, topology: Topology, assignment: Assignment) -> Assignment:
+        """Atomically apply a planned assignment and record it.
+
+        The split from :meth:`submit` lets callers (the Nimbus facade) inspect
+        a dry-run plan and reject it *before* any cluster mutation.
+        """
+        if topology.id in self.topologies:
+            raise ValueError(f"topology {topology.id!r} already submitted")
+        assignment.apply(topology, self.cluster)
         self.topologies[topology.id] = topology
         self.assignments[topology.id] = assignment
         return assignment
 
-    def kill(self, topology_id: str) -> None:
+    def kill(self, topology_id: str) -> Assignment:
         """Remove a topology and return its resources to the cluster."""
         topology = self.topologies.pop(topology_id)
         assignment = self.assignments.pop(topology_id)
@@ -46,12 +57,18 @@ class GlobalState:
             task = tasks.get(tid)
             if task is not None and task in node.assigned_tasks:
                 node.unassign(task, topology.demand_of(task))
+        return assignment
 
-    def orphaned_tasks(self) -> List[str]:
-        """Tasks whose node has died — input to the rescheduler."""
-        out = []
-        for tid_topology, assignment in self.assignments.items():
+    def orphaned_tasks(self) -> List[Tuple[str, str]]:
+        """(topology_id, task_id) pairs whose node has died — rescheduler input.
+
+        Pairs, not bare task ids: task ids are only unique *within* a topology
+        (two topologies both have e.g. ``spout[0]`` when built without a
+        topology-id prefix), so bare ids would collide across topologies.
+        """
+        out: List[Tuple[str, str]] = []
+        for topo_id, assignment in self.assignments.items():
             for tid, nid in assignment.placements.items():
                 if not self.cluster.nodes[nid].alive:
-                    out.append(tid)
+                    out.append((topo_id, tid))
         return out

@@ -41,17 +41,20 @@ class Rescheduler:
             self.state.cluster.racks.setdefault(spec.rack_id, []).append(spec.node_id)
         return self._replace_orphans(include_unassigned=True)
 
+    def rebalance(self) -> Dict[str, List[str]]:
+        """Re-place orphaned *and* unassigned tasks on the current cluster."""
+        return self._replace_orphans(include_unassigned=True)
+
     def _replace_orphans(self, include_unassigned: bool = False) -> Dict[str, List[str]]:
         cluster = self.state.cluster
         moved: Dict[str, List[str]] = {}
+        orphans_by_topo: Dict[str, List[str]] = {}
+        for topo_id, tid in self.state.orphaned_tasks():
+            orphans_by_topo.setdefault(topo_id, []).append(tid)
         for topo_id, assignment in self.state.assignments.items():
             topology = self.state.topologies[topo_id]
             tasks = {t.id: t for t in topology.all_tasks()}
-            orphans = [
-                tid
-                for tid, nid in assignment.placements.items()
-                if not cluster.nodes[nid].alive
-            ]
+            orphans = list(orphans_by_topo.get(topo_id, []))
             if include_unassigned:
                 orphans += [t for t in assignment.unassigned if t in tasks]
             if not orphans:

@@ -17,9 +17,26 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 from .assignment import Assignment
 from .cluster import Cluster
 from .node_selection import DEFAULT_SOFT_WEIGHTS, NodeSelector
+from .registry import (
+    KwargField,
+    REGISTRY,
+    SCHEDULERS,
+    get_scheduler,
+    register_scheduler,
+    scheduler_names,
+    validate_scheduler_kwargs,
+)
 from .resources import ResourceVector
 from .topology import Task, Topology
 from .traversal import bfs_topology_traversal, task_selection
+
+# Shared kwarg schemas.
+_WEIGHTS = KwargField(
+    types=(dict, type(None)),
+    default=None,
+    doc="soft-dimension distance weights (Alg 4), e.g. {'cpu_points': 4e-4}",
+)
+_SEED = KwargField(types=(int,), default=0, minimum=0, doc="PRNG seed")
 
 
 class Scheduler:
@@ -48,10 +65,9 @@ class Scheduler:
         return assignment
 
 
+@register_scheduler("rstorm", kwargs_schema={"weights": _WEIGHTS})
 class RStormScheduler(Scheduler):
     """Algorithm 1: taskOrdering = TaskSelection(); for each task, NodeSelection."""
-
-    name = "rstorm"
 
     def __init__(self, weights: Optional[Mapping[str, float]] = None):
         self.weights = weights
@@ -74,6 +90,18 @@ class RStormScheduler(Scheduler):
         return self._finish(topology, cluster, work, assignment, commit, t0)
 
 
+@register_scheduler(
+    "round_robin",
+    kwargs_schema={
+        "seed": _SEED,
+        "slot_mode": KwargField(
+            types=(str,),
+            default="port_major",
+            choices=("port_major", "node_major"),
+            doc="worker-slot ordering; node_major reproduces the §6.3.2 Star bottleneck",
+        ),
+    },
+)
 class RoundRobinScheduler(Scheduler):
     """Default Storm: pseudo-random round-robin over worker slots (§2).
 
@@ -89,8 +117,6 @@ class RoundRobinScheduler(Scheduler):
       behaviour behind the paper's §6.3.2 Star bottleneck ("one of the
       machines ... gets over utilized ... and creates a bottleneck").
     """
-
-    name = "round_robin"
 
     def __init__(self, seed: int = 0, slot_mode: str = "port_major"):
         if slot_mode not in ("port_major", "node_major"):
@@ -128,6 +154,7 @@ class RoundRobinScheduler(Scheduler):
         return self._finish(topology, cluster, work, assignment, commit, t0)
 
 
+@register_scheduler("rstorm_plus", kwargs_schema={"weights": _WEIGHTS})
 class RStormPlusScheduler(RStormScheduler):
     """Beyond-paper variant (DESIGN.md §6.1):
 
@@ -137,8 +164,6 @@ class RStormPlusScheduler(RStormScheduler):
     (b) among equidistant candidates, prefers the node already hosting an
         upstream peer of the task (explicit quadratic-term credit).
     """
-
-    name = "rstorm_plus"
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
         t0 = time.perf_counter()
@@ -184,6 +209,16 @@ class RStormPlusScheduler(RStormScheduler):
         return best
 
 
+@register_scheduler(
+    "rstorm_annealed",
+    kwargs_schema={
+        "iters": KwargField(
+            types=(int,), default=400, minimum=1, doc="local-search swap budget"
+        ),
+        "seed": _SEED,
+        "weights": _WEIGHTS,
+    },
+)
 class AnnealedScheduler(Scheduler):
     """Beyond-paper (DESIGN.md §6.2): R-Storm seed + pairwise-swap local search
     minimizing (network cost, soft overload) lexicographically.
@@ -191,8 +226,6 @@ class AnnealedScheduler(Scheduler):
     Deliberately budgeted (``iters``) to stay within the paper's "snappy
     scheduling" requirement.
     """
-
-    name = "rstorm_annealed"
 
     def __init__(self, iters: int = 400, seed: int = 0, weights=None):
         self.iters = iters
@@ -244,14 +277,19 @@ class AnnealedScheduler(Scheduler):
         return self._finish(topology, cluster, copy.deepcopy(cluster), out, commit, t0)
 
 
-SCHEDULERS: Dict[str, type] = {
-    cls.name: cls
-    for cls in (RStormScheduler, RoundRobinScheduler, RStormPlusScheduler, AnnealedScheduler)
-}
-
-
-def get_scheduler(name: str, **kwargs) -> Scheduler:
-    try:
-        return SCHEDULERS[name](**kwargs)
-    except KeyError:
-        raise KeyError(f"unknown scheduler {name!r}; have {sorted(SCHEDULERS)}") from None
+# ``SCHEDULERS`` and ``get_scheduler`` now live on the registry and are
+# re-exported here (populated above via @register_scheduler).
+__all__ = [
+    "AnnealedScheduler",
+    "KwargField",
+    "REGISTRY",
+    "RoundRobinScheduler",
+    "RStormPlusScheduler",
+    "RStormScheduler",
+    "SCHEDULERS",
+    "Scheduler",
+    "get_scheduler",
+    "register_scheduler",
+    "scheduler_names",
+    "validate_scheduler_kwargs",
+]

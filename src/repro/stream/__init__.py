@@ -1,9 +1,13 @@
 # Stream-processing substrate: Storm-like topology builder API, the network
 # model, the steady-state throughput simulator (quantitative reproduction
 # vehicle on a CPU-only container), and a real threaded executor.
+#
+# Declarative entry points (SchedulingPayload -> plan -> simulate) live in
+# ``repro.api``; ``simulate_payload`` is the bridge from a pure-dict payload
+# to a simulated placement.
 from .api import TopologyBuilder
 from .network import NetworkModel, EMULAB_NETWORK
-from .simulator import SimResult, Simulator, simulate
+from .simulator import SimResult, Simulator, simulate, simulate_payload
 from .metrics import StatisticServer
 from . import topologies
 
@@ -14,6 +18,7 @@ __all__ = [
     "Simulator",
     "SimResult",
     "simulate",
+    "simulate_payload",
     "StatisticServer",
     "topologies",
 ]

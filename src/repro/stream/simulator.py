@@ -593,3 +593,21 @@ def simulate(
     network: NetworkModel = EMULAB_NETWORK,
 ) -> SimResult:
     return Simulator(cluster, network).run(topology, assignment)
+
+
+def simulate_payload(payload):
+    """Payload-driven entry point: dry-run the payload through the Nimbus
+    facade and simulate the resulting placement.
+
+    Returns the SchedulingPlan with ``plan.sim`` populated; nothing is
+    committed (plan-only), so this is safe to call repeatedly.
+    """
+    import dataclasses as _dc
+
+    from ..api import Nimbus  # local import: api imports this module
+
+    if not payload.settings.simulate:
+        payload = _dc.replace(
+            payload, settings=_dc.replace(payload.settings, simulate=True)
+        )
+    return Nimbus().plan(payload)

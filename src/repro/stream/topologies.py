@@ -286,3 +286,20 @@ ALL_YAHOO = {
     "pageload": pageload,
     "processing": processing,
 }
+
+ALL = {**ALL_MICRO, **ALL_YAHOO}
+
+
+def make(name: str, **kwargs) -> Topology:
+    """Build a named evaluation topology (scenario-table style)."""
+    if name not in ALL:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(ALL)}")
+    return ALL[name](**kwargs)
+
+
+def spec(name: str, **kwargs):
+    """The declarative (TopologySpec) form of a named evaluation topology —
+    the bridge from this module's builder-made catalog to payload-as-data."""
+    from ..api.specs import TopologySpec  # local import: api imports core only
+
+    return TopologySpec.from_topology(make(name, **kwargs))

@@ -1,0 +1,226 @@
+"""Nimbus facade tests: plan is side-effect free, submit commits atomically,
+kill/rebalance manage state, and the payload path reproduces the old direct
+``scheduler.schedule()`` placements exactly."""
+
+import pytest
+
+from repro.api import (
+    ClusterSpec,
+    ComponentSpec,
+    Nimbus,
+    PayloadValidationError,
+    RunSettings,
+    SchedulerSpec,
+    SchedulingPayload,
+    TopologySpec,
+    UnschedulablePayloadError,
+    get_scheduler,
+)
+from repro.api.specs import CLUSTER_PRESETS
+from repro.stream import Simulator, topologies
+
+
+def payload(
+    topo_name="pageload",
+    scheduler="rstorm",
+    kwargs=None,
+    preset="emulab_12",
+    **settings,
+) -> SchedulingPayload:
+    return SchedulingPayload(
+        topology=topologies.spec(topo_name),
+        cluster=ClusterSpec(preset=preset),
+        scheduler=SchedulerSpec(scheduler, dict(kwargs or {})),
+        settings=RunSettings(**settings),
+    )
+
+
+def cluster_is_pristine(cluster) -> bool:
+    return (
+        cluster.total_available().values == cluster.total_capacity().values
+        and all(not n.assigned_tasks for n in cluster.nodes.values())
+    )
+
+
+# -- plan vs submit ----------------------------------------------------------------
+def test_plan_is_side_effect_free():
+    nimbus = Nimbus()
+    p = payload()
+    plan1 = nimbus.plan(p)
+    assert not plan1.committed
+    # Planning on an empty Nimbus pins nothing: no state, no cluster.
+    assert nimbus.topologies == [] and nimbus.cluster is None
+    plan2 = nimbus.plan(p)
+    assert plan1.placements == plan2.placements
+    # Planning against a declared cluster leaves it pristine.
+    declared = Nimbus(ClusterSpec(preset="emulab_12"))
+    declared.plan(p)
+    assert cluster_is_pristine(declared.cluster)
+    # A dry-run does not block a later submit against a different cluster.
+    fresh = Nimbus()
+    fresh.plan(payload(preset="emulab_12"))
+    assert fresh.submit(payload(preset="emulab_24")).committed
+
+
+def test_nimbus_from_live_cluster_checks_payload_spec():
+    from repro.core import emulab_cluster_24
+
+    nimbus = Nimbus(emulab_cluster_24())
+    with pytest.raises(PayloadValidationError, match="does not match"):
+        nimbus.submit(payload(preset="emulab_12"))
+    # An equivalent spec (preset expanding to the same node set) is accepted.
+    assert nimbus.submit(payload(preset="emulab_24")).committed
+
+
+def test_submit_commits_and_kill_returns_resources():
+    nimbus = Nimbus()
+    plan = nimbus.submit(payload())
+    assert plan.committed and nimbus.topologies == ["pageload"]
+    assert not cluster_is_pristine(nimbus.cluster)
+    used = sum(len(n.assigned_tasks) for n in nimbus.cluster.nodes.values())
+    assert used == len(plan.placements)
+    nimbus.kill("pageload")
+    assert nimbus.topologies == []
+    assert cluster_is_pristine(nimbus.cluster)
+    with pytest.raises(KeyError, match="unknown topology"):
+        nimbus.kill("pageload")
+
+
+def test_duplicate_submit_rejected_without_mutation():
+    nimbus = Nimbus()
+    nimbus.submit(payload())
+    before = nimbus.cluster.total_available().values
+    with pytest.raises(PayloadValidationError, match="already submitted"):
+        nimbus.submit(payload())
+    assert nimbus.cluster.total_available().values == before
+
+
+def test_malformed_payload_rejected_before_any_mutation():
+    nimbus = Nimbus()
+    nimbus.submit(payload())  # establish a live cluster
+    bad = SchedulingPayload(
+        topology=TopologySpec(
+            id="bad",
+            components=(ComponentSpec(id="s", is_spout=True, memory_load_mb=-1.0),),
+        ),
+        cluster=ClusterSpec(preset="emulab_12"),
+        scheduler=SchedulerSpec("rstormx"),
+    )
+    before = nimbus.cluster.total_available().values
+    with pytest.raises(PayloadValidationError) as ei:
+        nimbus.submit(bad)
+    assert any("memory_load_mb" in e for e in ei.value.errors)
+    assert any("unknown scheduler" in e for e in ei.value.errors)
+    assert nimbus.cluster.total_available().values == before
+    assert nimbus.topologies == ["pageload"]
+
+
+def test_allow_partial_false_rejects_infeasible_plan_whole():
+    # 4 GB per task fits nowhere on the 2 GB-node Emulab cluster.
+    huge = SchedulingPayload(
+        topology=TopologySpec(
+            id="huge",
+            components=(
+                ComponentSpec(id="s", is_spout=True, parallelism=3, memory_load_mb=4096.0),
+            ),
+        ),
+        cluster=ClusterSpec(preset="emulab_12"),
+        scheduler=SchedulerSpec("rstorm"),
+        settings=RunSettings(allow_partial=False),
+    )
+    nimbus = Nimbus()
+    with pytest.raises(UnschedulablePayloadError, match="nothing was committed"):
+        nimbus.submit(huge)
+    assert nimbus.topologies == []
+    assert cluster_is_pristine(nimbus.cluster)
+
+
+def test_mismatched_cluster_spec_rejected():
+    nimbus = Nimbus(ClusterSpec(preset="emulab_12"))
+    with pytest.raises(PayloadValidationError, match="does not match"):
+        nimbus.submit(payload(preset="emulab_24"))
+
+
+# -- equivalence with the old hand-wired path ----------------------------------------
+@pytest.mark.parametrize(
+    "sched_name,kwargs",
+    [
+        ("rstorm", {}),
+        ("round_robin", {"seed": 1}),
+        ("rstorm_annealed", {"iters": 300}),
+    ],
+)
+@pytest.mark.parametrize("preset", ["emulab_12", "emulab_24"])
+@pytest.mark.parametrize("topo_name", ["pageload", "processing"])
+def test_payload_path_matches_direct_scheduler_path(sched_name, kwargs, preset, topo_name):
+    """Acceptance: Nimbus.submit places exactly as scheduler.schedule() did."""
+    plan = Nimbus().submit(payload(topo_name, sched_name, kwargs, preset))
+    cluster = CLUSTER_PRESETS[preset]()
+    direct = get_scheduler(sched_name, **kwargs).schedule(
+        getattr(topologies, topo_name)(), cluster, commit=False
+    )
+    assert plan.placements == direct.placements
+    assert plan.unassigned == direct.unassigned
+
+
+# -- plan report -----------------------------------------------------------------
+def test_plan_reports_utilization_netcost_and_sim():
+    plan = Nimbus().plan(payload(scheduler="rstorm", simulate=True))
+    assert plan.scheduler_name == "rstorm"
+    assert plan.schedule_time_s > 0
+    assert plan.machines_used == len(set(plan.placements.values()))
+    assert set(plan.node_utilization) == set(plan.placements.values())
+    for dims in plan.node_utilization.values():
+        assert 0.0 < dims["memory_mb"] <= 1.0  # memory is a hard constraint
+    # network_cost matches the assignment's own accounting.
+    cluster = CLUSTER_PRESETS["emulab_12"]()
+    assert plan.network_cost == pytest.approx(
+        plan.assignment.network_cost(plan.topology, cluster)
+    )
+    # The attached sim equals a direct Simulator run of the same placement.
+    direct = Simulator(cluster).run(plan.topology, plan.assignment)
+    assert plan.sim.sink_throughput == pytest.approx(direct.sink_throughput)
+    d = plan.to_dict()
+    assert d["sim"]["binding"] == plan.sim.binding
+    assert d["machines_used"] == plan.machines_used
+
+
+# -- rebalance / multi-topology state --------------------------------------------
+def test_rebalance_replaces_orphans_after_node_failure():
+    nimbus = Nimbus()
+    plan = nimbus.submit(payload())
+    victim = sorted(set(plan.placements.values()))[0]
+    nimbus.cluster.fail_node(victim)
+    orphans = nimbus.state.orphaned_tasks()
+    assert orphans and all(topo == "pageload" for topo, _ in orphans)
+    moved = nimbus.rebalance()
+    assert sorted(moved["pageload"]) == sorted(tid for _, tid in orphans)
+    assignment = nimbus.state.assignments["pageload"]
+    assert victim not in set(assignment.placements.values())
+    assert nimbus.state.orphaned_tasks() == []
+
+
+def test_orphaned_tasks_are_topology_qualified_pairs():
+    """Two topologies with colliding bare task ids must stay distinguishable."""
+    from repro.core import Component, GlobalState, RStormScheduler, Topology, emulab_cluster_24
+
+    def mk(tid):
+        t = Topology(tid)
+        c = Component("spout", is_spout=True, parallelism=2)
+        c.set_memory_load(256.0)
+        t.add_component(c)
+        return t
+
+    gs = GlobalState(emulab_cluster_24())
+    a1 = gs.submit(mk("t1"), RStormScheduler())
+    a2 = gs.submit(mk("t2"), RStormScheduler())
+    for assignment in (a1, a2):
+        for nid in set(assignment.placements.values()):
+            if gs.cluster.nodes[nid].alive:
+                gs.cluster.fail_node(nid)
+    pairs = gs.orphaned_tasks()
+    assert len(pairs) == len(set(pairs))  # no collisions: pairs are unique
+    assert {topo for topo, _ in pairs} == {"t1", "t2"}
+    # Each pair resolves inside its own topology's assignment.
+    for topo_id, tid in pairs:
+        assert tid in gs.assignments[topo_id].placements

@@ -1,0 +1,222 @@
+"""SchedulingPayload contract tests: lossless JSON round-trip and strict,
+actionable upfront validation."""
+
+import json
+
+import pytest
+
+from repro.api import (
+    ClusterSpec,
+    ComponentSpec,
+    EdgeSpec,
+    NodeEntry,
+    PayloadValidationError,
+    RunSettings,
+    SchedulerSpec,
+    SchedulingPayload,
+    TopologySpec,
+)
+from repro.stream import topologies
+
+
+def linear_spec(tid="lin", mem=512.0) -> TopologySpec:
+    return TopologySpec(
+        id=tid,
+        components=(
+            ComponentSpec(id="spout", is_spout=True, parallelism=2, memory_load_mb=mem),
+            ComponentSpec(id="bolt", parallelism=2, memory_load_mb=mem),
+        ),
+        edges=(EdgeSpec("spout", "bolt"),),
+    )
+
+
+def make_payload(**over) -> SchedulingPayload:
+    kw = dict(
+        topology=linear_spec(),
+        cluster=ClusterSpec(preset="emulab_12"),
+        scheduler=SchedulerSpec("rstorm"),
+        settings=RunSettings(),
+    )
+    kw.update(over)
+    return SchedulingPayload(**kw)
+
+
+# -- round-trip -----------------------------------------------------------------
+@pytest.mark.parametrize(
+    "scheduler",
+    [
+        {"name": "rstorm", "kwargs": {}},
+        {"name": "round_robin", "kwargs": {"seed": 3, "slot_mode": "node_major"}},
+        {"name": "rstorm_annealed", "kwargs": {"iters": 800, "seed": 1}},
+    ],
+)
+@pytest.mark.parametrize("preset", ["emulab_12", "emulab_24"])
+def test_pure_dict_payload_roundtrips_unchanged(scheduler, preset):
+    """Acceptance: 3 schedulers x both emulab clusters, dict -> payload -> dict."""
+    raw = {
+        "topology": topologies.spec("pageload").to_dict(),
+        "cluster": {"preset": preset},
+        "scheduler": scheduler,
+        "settings": {"allow_partial": True, "simulate": False},
+    }
+    raw = json.loads(json.dumps(raw))  # prove it's pure JSON
+    payload = SchedulingPayload.from_dict(raw)
+    assert payload.to_dict() == raw
+    # And a second pass is a fixed point.
+    assert SchedulingPayload.from_dict(payload.to_dict()).to_dict() == raw
+
+
+def test_programmatic_payload_roundtrips_through_json():
+    p = make_payload(
+        cluster=ClusterSpec(
+            nodes=(
+                NodeEntry("n0", "r0"),
+                NodeEntry("n1", "r0", cpu_capacity=200.0, num_worker_slots=2),
+            )
+        ),
+        scheduler=SchedulerSpec("rstorm_annealed", {"iters": 42}),
+        settings=RunSettings(allow_partial=False, simulate=True),
+    )
+    assert SchedulingPayload.from_dict(json.loads(json.dumps(p.to_dict()))) == p
+
+
+def test_homogeneous_cluster_roundtrip_and_materialization():
+    spec = ClusterSpec(racks=3, nodes_per_rack=2, memory_mb=4096.0)
+    p = make_payload(cluster=spec)
+    assert SchedulingPayload.from_dict(p.to_dict()).cluster == spec
+    cl = spec.to_cluster()
+    assert len(cl.nodes) == 6 and len(cl.racks) == 3
+    assert next(iter(cl.nodes.values())).spec.memory_capacity_mb == 4096.0
+
+
+def test_topology_spec_is_faithful_to_builder_topology():
+    topo = topologies.processing()
+    spec = TopologySpec.from_topology(topo)
+    rebuilt = spec.to_topology()
+    assert rebuilt.id == topo.id and rebuilt.acked == topo.acked
+    assert rebuilt.edges == topo.edges
+    assert rebuilt.groupings == topo.groupings
+    assert {t.id for t in rebuilt.all_tasks()} == {t.id for t in topo.all_tasks()}
+    for cid, comp in topo.components.items():
+        rb = rebuilt.components[cid]
+        assert rb.resource_demand.values == comp.resource_demand.values
+        assert rb.cpu_cost_per_tuple == comp.cpu_cost_per_tuple
+        assert rb.max_rate_per_task == comp.max_rate_per_task
+
+
+# -- validation errors ------------------------------------------------------------
+def errors_of(fn) -> str:
+    with pytest.raises(PayloadValidationError) as ei:
+        fn()
+    return "\n".join(ei.value.errors)
+
+
+def test_unknown_scheduler_is_actionable():
+    msg = errors_of(lambda: make_payload(scheduler=SchedulerSpec("rstormx")).validate())
+    assert "unknown scheduler 'rstormx'" in msg and "rstorm_annealed" in msg
+
+
+def test_bad_scheduler_kwargs():
+    msg = errors_of(
+        lambda: make_payload(
+            scheduler=SchedulerSpec("rstorm_annealed", {"iters": "many", "turbo": 1})
+        ).validate()
+    )
+    assert "scheduler.kwargs.iters: expected int" in msg
+    assert "scheduler.kwargs.turbo: unknown kwarg" in msg
+    msg = errors_of(
+        lambda: make_payload(
+            scheduler=SchedulerSpec("round_robin", {"slot_mode": "diagonal"})
+        ).validate()
+    )
+    assert "must be one of" in msg and "port_major" in msg
+
+
+def test_cyclic_topology_rejected():
+    spec = TopologySpec(
+        id="cyc",
+        components=(
+            ComponentSpec(id="s", is_spout=True),
+            ComponentSpec(id="a"),
+            ComponentSpec(id="b"),
+        ),
+        edges=(EdgeSpec("s", "a"), EdgeSpec("a", "b"), EdgeSpec("b", "a")),
+    )
+    msg = errors_of(lambda: make_payload(topology=spec).validate())
+    assert "cycle detected" in msg and "'a'" in msg and "'b'" in msg
+
+
+def test_disconnected_topology_rejected():
+    spec = TopologySpec(
+        id="disc",
+        components=(
+            ComponentSpec(id="s", is_spout=True),
+            ComponentSpec(id="island"),
+        ),
+    )
+    msg = errors_of(lambda: make_payload(topology=spec).validate())
+    assert "unreachable from any spout" in msg and "island" in msg
+
+
+def test_unknown_edge_endpoint_negative_load_no_spout():
+    spec = TopologySpec(
+        id="bad",
+        components=(
+            ComponentSpec(id="a", memory_load_mb=-5.0),
+            ComponentSpec(id="a", parallelism=0),
+        ),
+        edges=(EdgeSpec("a", "zzz"),),
+    )
+    msg = errors_of(lambda: make_payload(topology=spec).validate())
+    assert "memory_load_mb: must be a number >= 0" in msg
+    assert "duplicate component id 'a'" in msg
+    assert "parallelism: must be an int >= 1" in msg
+    assert "unknown component 'zzz'" in msg
+    assert "no spout" in msg
+
+
+def test_cluster_spec_modes_are_exclusive_and_checked():
+    msg = errors_of(lambda: make_payload(cluster=ClusterSpec()).validate())
+    assert "exactly one of" in msg
+    msg = errors_of(
+        lambda: make_payload(
+            cluster=ClusterSpec(preset="emulab_12", racks=2, nodes_per_rack=2)
+        ).validate()
+    )
+    assert "mutually exclusive" in msg
+    msg = errors_of(lambda: make_payload(cluster=ClusterSpec(preset="emulab_3")).validate())
+    assert "unknown preset 'emulab_3'" in msg
+    msg = errors_of(
+        lambda: make_payload(
+            cluster=ClusterSpec(nodes=(NodeEntry("n0", "r0"), NodeEntry("n0", "r1")))
+        ).validate()
+    )
+    assert "duplicate node id 'n0'" in msg
+
+
+def test_from_dict_rejects_unknown_keys_and_missing_sections():
+    msg = errors_of(lambda: SchedulingPayload.from_dict({"topology": {}}))
+    assert "payload.cluster: required key missing" in msg
+    assert "payload.scheduler: required key missing" in msg
+    p = make_payload()
+    raw = p.to_dict()
+    raw["topology"]["componets"] = []  # typo
+    msg = errors_of(lambda: SchedulingPayload.from_dict(raw))
+    assert "unknown key(s) ['componets']" in msg
+
+
+def test_all_errors_reported_at_once():
+    raw = {
+        "topology": {
+            "id": "t",
+            "components": [{"id": "a", "is_spout": True}, {"id": "b"}],
+            "edges": [{"src": "a", "dst": "zzz"}],
+        },
+        "cluster": {"preset": "emulab_99"},
+        "scheduler": {"name": "rstormx"},
+    }
+    with pytest.raises(PayloadValidationError) as ei:
+        SchedulingPayload.from_dict(raw)
+    joined = "\n".join(ei.value.errors)
+    assert "zzz" in joined and "emulab_99" in joined and "rstormx" in joined
+    assert len(ei.value.errors) >= 3

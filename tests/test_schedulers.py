@@ -3,7 +3,6 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     AnnealedScheduler,
@@ -142,53 +141,68 @@ def test_annealed_never_worse_than_seed():
     assert ann.network_cost(t, cl) <= seed.network_cost(t, cl) + 1e-9
 
 
-# -- hypothesis property tests ----------------------------------------------------
-@settings(max_examples=30, deadline=None)
-@given(
-    n_bolts=st.integers(1, 6),
-    par=st.integers(1, 6),
-    mem=st.floats(16.0, 1024.0),
-    cpu=st.floats(1.0, 120.0),
-    racks=st.integers(1, 4),
-    npr=st.integers(1, 8),
-)
-def test_property_hard_constraints_never_violated(n_bolts, par, mem, cpu, racks, npr):
-    t = linear_topology(n_bolts=n_bolts, parallelism=par, mem=mem, cpu=cpu)
-    cl = Cluster.homogeneous(racks=racks, nodes_per_rack=npr)
-    a = RStormScheduler().schedule(t, cl, commit=False)
-    # Invariant 1: placements ∪ unassigned is a partition of all tasks.
-    all_ids = {tk.id for tk in t.all_tasks()}
-    assert set(a.placements) | set(a.unassigned) == all_ids
-    assert not (set(a.placements) & set(a.unassigned))
-    # Invariant 2: no node over its hard memory budget.
-    assert a.hard_violations(t, cl) == []
-    # Invariant 3: if memory fits anywhere, at least one task is placed.
-    if mem <= 2048.0:
-        assert a.placements
+# -- registry -----------------------------------------------------------------
+def test_registry_knows_all_builtin_schedulers():
+    from repro.core import get_scheduler, scheduler_names
+
+    assert scheduler_names() == [
+        "round_robin",
+        "rstorm",
+        "rstorm_annealed",
+        "rstorm_plus",
+    ]
+    assert isinstance(get_scheduler("rstorm"), RStormScheduler)
+    assert get_scheduler("rstorm_annealed", iters=7).iters == 7
 
 
-@settings(max_examples=20, deadline=None)
-@given(par=st.integers(1, 5), seed=st.integers(0, 10))
-def test_property_rstorm_netcost_beats_or_ties_roundrobin(par, seed):
-    t = linear_topology(n_bolts=3, parallelism=par)
-    cl = emulab_cluster()
-    rr = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
-    cl.reset()
-    rs = RStormScheduler().schedule(t, cl, commit=False)
-    assert rs.network_cost(t, cl) <= rr.network_cost(t, cl) + 1e-9
+def test_registry_rejects_unknown_name_and_bad_kwargs():
+    from repro.core import get_scheduler, validate_scheduler_kwargs
+
+    with pytest.raises(KeyError, match="unknown scheduler"):
+        get_scheduler("nope")
+    with pytest.raises(TypeError, match="iters"):
+        get_scheduler("rstorm_annealed", iters="many")
+    with pytest.raises(TypeError, match="unknown kwarg"):
+        get_scheduler("rstorm", turbo=True)
+    errs = validate_scheduler_kwargs("round_robin", {"slot_mode": "diagonal"})
+    assert errs and "port_major" in errs[0]
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 50))
-def test_property_schedulers_are_deterministic(seed):
-    t = linear_topology()
-    cl = emulab_cluster()
-    a1 = RStormScheduler().schedule(t, cl, commit=False)
-    cl.reset()
-    a2 = RStormScheduler().schedule(t, cl, commit=False)
-    assert a1.placements == a2.placements
-    cl.reset()
-    b1 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
-    cl.reset()
-    b2 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
-    assert b1.placements == b2.placements
+def test_register_scheduler_decorator_adds_third_party_scheduler():
+    from repro.core import REGISTRY, SCHEDULERS, Scheduler, get_scheduler
+    from repro.core.registry import register_scheduler
+
+    @register_scheduler("test_noop")
+    class NoopScheduler(Scheduler):
+        def schedule(self, topology, cluster, *, commit=True):
+            from repro.core import Assignment
+
+            return Assignment(topology_id=topology.id)
+
+    try:
+        assert isinstance(get_scheduler("test_noop"), NoopScheduler)
+        assert SCHEDULERS["test_noop"] is NoopScheduler
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("test_noop")(NoopScheduler)
+    finally:
+        del REGISTRY["test_noop"]
+        del SCHEDULERS["test_noop"]
+
+
+def test_register_scheduler_unnamed_subclass_does_not_inherit_parent_name():
+    from repro.core import REGISTRY, SCHEDULERS
+    from repro.core.registry import register_scheduler
+
+    # RStormScheduler is registered as "rstorm"; an unnamed subclass must fall
+    # back to its class name, not collide with (or shadow) the parent's.
+    @register_scheduler()
+    class MyVariant(RStormScheduler):
+        pass
+
+    try:
+        assert MyVariant.name == "MyVariant"
+        assert SCHEDULERS["rstorm"] is RStormScheduler
+        assert SCHEDULERS["MyVariant"] is MyVariant
+    finally:
+        del REGISTRY["MyVariant"]
+        del SCHEDULERS["MyVariant"]

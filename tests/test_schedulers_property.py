@@ -1,0 +1,67 @@
+"""Hypothesis property tests for the scheduling core (skipped when the
+``hypothesis`` dependency is absent — the container does not bake it in)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    Cluster,
+    RoundRobinScheduler,
+    RStormScheduler,
+    emulab_cluster,
+)
+
+from test_schedulers import linear_topology  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_bolts=st.integers(1, 6),
+    par=st.integers(1, 6),
+    mem=st.floats(16.0, 1024.0),
+    cpu=st.floats(1.0, 120.0),
+    racks=st.integers(1, 4),
+    npr=st.integers(1, 8),
+)
+def test_property_hard_constraints_never_violated(n_bolts, par, mem, cpu, racks, npr):
+    t = linear_topology(n_bolts=n_bolts, parallelism=par, mem=mem, cpu=cpu)
+    cl = Cluster.homogeneous(racks=racks, nodes_per_rack=npr)
+    a = RStormScheduler().schedule(t, cl, commit=False)
+    # Invariant 1: placements ∪ unassigned is a partition of all tasks.
+    all_ids = {tk.id for tk in t.all_tasks()}
+    assert set(a.placements) | set(a.unassigned) == all_ids
+    assert not (set(a.placements) & set(a.unassigned))
+    # Invariant 2: no node over its hard memory budget.
+    assert a.hard_violations(t, cl) == []
+    # Invariant 3: if memory fits anywhere, at least one task is placed.
+    if mem <= 2048.0:
+        assert a.placements
+
+
+@settings(max_examples=20, deadline=None)
+@given(par=st.integers(1, 5), seed=st.integers(0, 10))
+def test_property_rstorm_netcost_beats_or_ties_roundrobin(par, seed):
+    t = linear_topology(n_bolts=3, parallelism=par)
+    cl = emulab_cluster()
+    rr = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    cl.reset()
+    rs = RStormScheduler().schedule(t, cl, commit=False)
+    assert rs.network_cost(t, cl) <= rr.network_cost(t, cl) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_property_schedulers_are_deterministic(seed):
+    t = linear_topology()
+    cl = emulab_cluster()
+    a1 = RStormScheduler().schedule(t, cl, commit=False)
+    cl.reset()
+    a2 = RStormScheduler().schedule(t, cl, commit=False)
+    assert a1.placements == a2.placements
+    cl.reset()
+    b1 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    cl.reset()
+    b2 = RoundRobinScheduler(seed=seed).schedule(t, cl, commit=False)
+    assert b1.placements == b2.placements
