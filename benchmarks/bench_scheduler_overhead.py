@@ -2,7 +2,9 @@
 to be made in a snappy manner" — Nimbus invokes the scheduler every 10 s).
 
 R-Storm is O(tasks × nodes); we verify the absolute cost stays far below the
-10 s scheduling round even for 1000-task topologies on 256-node clusters.
+10 s scheduling round even for 1000-task topologies on 256-node clusters,
+and measure the array-backed engine against the dict-based legacy path
+(`engine="legacy"`), emitting the speedup per case.
 """
 
 from __future__ import annotations
@@ -25,29 +27,62 @@ def chain_topology(components: int, parallelism: int) -> Topology:
     return t
 
 
+#: (components, parallelism, racks, nodes_per_rack)
+SIZES = (
+    (4, 4, 2, 6),
+    (8, 8, 2, 12),
+    (16, 16, 4, 16),
+    (25, 40, 8, 32),  # 1000 tasks, 256 nodes
+)
+
+#: (label, registry name, extra kwargs)
+MATRIX = (
+    ("rstorm", "rstorm", {}),
+    ("default", "round_robin", {}),
+    ("rstorm_annealed", "rstorm_annealed", {"iters": 400}),
+)
+
+
 def run() -> list:
     rows = []
-    for comps, par, racks, nodes_per_rack in (
-        (4, 4, 2, 6),
-        (8, 8, 2, 12),
-        (16, 16, 4, 16),
-        (25, 40, 8, 32),  # 1000 tasks, 256 nodes
-    ):
+    for comps, par, racks, nodes_per_rack in SIZES:
         topo = chain_topology(comps, par)
         cluster = Cluster.homogeneous(
             racks=racks, nodes_per_rack=nodes_per_rack, memory_mb=65536.0, cpu=6400.0
         )
-        for label, name in (("rstorm", "rstorm"), ("default", "round_robin")):
-            sched = get_scheduler(name)
-            cluster.reset()
-            a, secs = timed(lambda: sched.schedule(topo, cluster, commit=False), repeat=2)
-            emit_csv_row(
-                f"sched_overhead/{label}_t{comps * par}_n{racks * nodes_per_rack}",
-                secs * 1e6,
-                f"tasks={comps * par};nodes={racks * nodes_per_rack};"
-                f"complete={a.is_complete(topo)}",
+        tasks, nodes = comps * par, racks * nodes_per_rack
+        for label, name, kwargs in MATRIX:
+            # Legacy full-recompute annealer swaps are O(E) per iteration —
+            # minutes at the flagship size; time only the arena engine there.
+            engines = (
+                ("arena",)
+                if label == "rstorm_annealed" and tasks > 256
+                else ("arena", "legacy")
             )
-            rows.append((label, comps * par, racks * nodes_per_rack, secs))
+            per_engine = {}
+            for engine in engines:
+                sched = get_scheduler(name, engine=engine, **kwargs)
+                cluster.reset()
+                a, secs = timed(
+                    lambda: sched.schedule(topo, cluster, commit=False), repeat=2
+                )
+                per_engine[engine] = secs
+                emit_csv_row(
+                    f"sched_overhead/{label}_{engine}_t{tasks}_n{nodes}",
+                    secs * 1e6,
+                    f"tasks={tasks};nodes={nodes};complete={a.is_complete(topo)}",
+                )
+            if "legacy" in per_engine:
+                speedup = per_engine["legacy"] / max(per_engine["arena"], 1e-12)
+                emit_csv_row(
+                    f"sched_overhead/{label}_speedup_t{tasks}_n{nodes}",
+                    speedup,
+                    f"tasks={tasks};nodes={nodes};arena_s={per_engine['arena']:.4f};"
+                    f"legacy_s={per_engine['legacy']:.4f}",
+                )
+            rows.append(
+                (label, tasks, nodes, per_engine["arena"], per_engine.get("legacy"))
+            )
     return rows
 
 

@@ -1,0 +1,50 @@
+"""CI hot-path regression gate: the 1000-task / 256-node R-Storm schedule
+must complete within a fixed wall-clock budget, and fully place the topology.
+
+The arena engine does this in ~0.06 s on a laptop (the legacy dict path
+takes ~2 s); the budget leaves generous headroom for slow CI runners while
+still failing hard if the vectorized hot path regresses to per-task Python
+dict churn.
+
+Usage: PYTHONPATH=src python -m benchmarks.check_overhead_budget [budget_s]
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.core import Cluster, get_scheduler
+
+from .bench_scheduler_overhead import SIZES, chain_topology
+
+DEFAULT_BUDGET_S = 1.5
+
+
+def main() -> int:
+    budget_s = float(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT_BUDGET_S
+    # The gate always enforces the bench's flagship (largest) case.
+    comps, par, racks, nodes_per_rack = SIZES[-1]
+    topo = chain_topology(comps, par)
+    cluster = Cluster.homogeneous(
+        racks=racks, nodes_per_rack=nodes_per_rack, memory_mb=65536.0, cpu=6400.0
+    )
+    sched = get_scheduler("rstorm")
+    best = float("inf")
+    for _ in range(3):
+        cluster.reset()
+        t0 = time.perf_counter()
+        assignment = sched.schedule(topo, cluster, commit=False)
+        best = min(best, time.perf_counter() - t0)
+    ok = best <= budget_s and assignment.is_complete(topo)
+    print(
+        f"scheduler-overhead budget: {topo.task_count()} tasks / "
+        f"{len(cluster.nodes)} nodes in {best:.3f}s "
+        f"(budget {budget_s:.1f}s, complete={assignment.is_complete(topo)}) "
+        f"-> {'OK' if ok else 'FAIL'}"
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -216,17 +216,26 @@ class Nimbus:
         id, or (with ``allow_partial=False``) cannot be fully placed is
         rejected before any cluster mutation.
         """
+        was_empty = self.state is None
         topology, scheduler, cluster = self._prepare(payload, persist=True)
-        if topology.id in self.state.topologies:
-            raise PayloadValidationError(
-                [
-                    f"topology.id: {topology.id!r} is already submitted; "
-                    "kill it first or choose a different id"
-                ]
-            )
-        assignment = scheduler.schedule(topology, cluster, commit=False)
-        if assignment.unassigned and not payload.settings.allow_partial:
-            raise UnschedulablePayloadError(topology.id, assignment.unassigned)
+        try:
+            if topology.id in self.state.topologies:
+                raise PayloadValidationError(
+                    [
+                        f"topology.id: {topology.id!r} is already submitted; "
+                        "kill it first or choose a different id"
+                    ]
+                )
+            assignment = scheduler.schedule(topology, cluster, commit=False)
+            if assignment.unassigned and not payload.settings.allow_partial:
+                raise UnschedulablePayloadError(topology.id, assignment.unassigned)
+        except BaseException:
+            if was_empty:
+                # A rejected submit must leave an empty Nimbus empty — don't
+                # let it silently adopt the rejected payload's cluster.
+                self.state = None
+                self._cluster_spec = None
+            raise
         self.state.commit(topology, assignment)
         sim = (
             self._simulate(topology, assignment, cluster)

@@ -13,6 +13,7 @@ from .topology import Component, Task, Topology
 from .cluster import Cluster, Node, NodeSpec, emulab_cluster, emulab_cluster_24
 from .traversal import bfs_topology_traversal, task_selection
 from .node_selection import NodeSelector
+from .engine import ArenaSelector, PlacementArena, SwapAnnealer
 from .assignment import Assignment
 from .schedulers import (
     AnnealedScheduler,
@@ -52,6 +53,9 @@ __all__ = [
     "bfs_topology_traversal",
     "task_selection",
     "NodeSelector",
+    "ArenaSelector",
+    "PlacementArena",
+    "SwapAnnealer",
     "Assignment",
     "Scheduler",
     "RStormScheduler",

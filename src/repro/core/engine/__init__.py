@@ -1,0 +1,8 @@
+# Array-backed placement engine: the vectorized scheduling core every
+# registered scheduler runs on (the dict-based NodeSelector path remains
+# available as the reference implementation via ``engine="legacy"``).
+from .arena import PlacementArena
+from .selection import ArenaSelector
+from .annealing import SwapAnnealer
+
+__all__ = ["ArenaSelector", "PlacementArena", "SwapAnnealer"]

@@ -1,0 +1,133 @@
+"""Incremental swap evaluation for the annealed scheduler.
+
+The dict path recomputes the full O(E) ``Assignment.network_cost`` plus a
+full per-node memory-overload pass on *every* candidate swap.  Here a swap is
+evaluated in O(degree(a) + degree(b)) with precompiled adjacency arrays and
+the arena's N×N net-distance matrix.
+
+Exactness: every netDist value is a small multiple of 0.5, so sums and
+differences of hop weights are exact in float64 — the incrementally-tracked
+cost equals the full recomputation bit-for-bit, and accept/reject decisions
+(hence placements) match the legacy annealer.  (Memory terms are exact for
+any demand whose running per-node sums are representable, which holds for
+the benchmark topologies; the golden suite pins this.)
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, List
+
+import numpy as np
+
+from .arena import PlacementArena
+from ..topology import Topology
+
+#: Same soft-overload penalty weight as the legacy annealer cost.
+OVERLOAD_PENALTY = 1e6
+
+
+class SwapAnnealer:
+    """Pairwise-swap local search over placed tasks of one topology.
+
+    Minimizes ``network_cost + 1e6 × memory_overload`` with the same PRNG
+    stream, acceptance rule (``new <= cur``) and iteration semantics as the
+    legacy annealer — only the cost evaluation is incremental.
+    """
+
+    def __init__(
+        self,
+        arena: PlacementArena,
+        topology: Topology,
+        placements: Dict[str, str],
+    ):
+        self.arena = arena
+        self.topology = topology
+        # Sorted task ids: the legacy swap loop samples from sorted(placements),
+        # so the PRNG stream is identical.
+        self.tids: List[str] = sorted(placements)
+        tindex = {tid: i for i, tid in enumerate(self.tids)}
+        self._tindex = tindex
+        self.p = np.array(
+            [arena.index[placements[tid]] for tid in self.tids], dtype=np.intp
+        )
+        # Per-task hard-memory demand and per-node capacity (the legacy cost
+        # checks placed-task memory against raw node capacity).
+        demands = {t.id: topology.demand_of(t) for t in topology.all_tasks()}
+        self.mem = np.array(
+            [demands[tid]["memory_mb"] for tid in self.tids], dtype=np.float64
+        )
+        self.cap_mem = np.array(
+            [
+                arena.cluster.nodes[nid].spec.memory_capacity_mb
+                for nid in arena.node_ids
+            ],
+            dtype=np.float64,
+        )
+        # Adjacency over placed tasks: one entry per directed task edge per
+        # endpoint (edges with an unassigned endpoint never enter the cost).
+        adj: List[List[int]] = [[] for _ in self.tids]
+        edge_pairs: List[List[int]] = []
+        for src, dst in topology.task_edges():
+            a, b = tindex.get(src.id), tindex.get(dst.id)
+            if a is None or b is None:
+                continue
+            edge_pairs.append([a, b])
+            adj[a].append(b)
+            adj[b].append(a)
+        self.adj = [np.array(x, dtype=np.intp) for x in adj]
+        self.edges = (
+            np.array(edge_pairs, dtype=np.intp)
+            if edge_pairs
+            else np.zeros((0, 2), dtype=np.intp)
+        )
+        self.used_mem = np.zeros(len(arena.node_ids), dtype=np.float64)
+        np.add.at(self.used_mem, self.p, self.mem)
+
+    def _overload(self) -> float:
+        return float(np.maximum(0.0, self.used_mem - self.cap_mem).sum())
+
+    def cost(self) -> float:
+        return self.arena.network_cost(self.p, self.edges) + OVERLOAD_PENALTY * self._overload()
+
+    def run(self, iters: int, rng: random.Random) -> Dict[str, str]:
+        """Budgeted swap loop; returns the improved task→node-id mapping."""
+        arena, net = self.arena, self.arena.net
+        cur = self.cost()
+        if len(self.tids) >= 2:
+            for _ in range(iters):
+                a_id, b_id = rng.sample(self.tids, 2)
+                ia, ib = self._tindex[a_id], self._tindex[b_id]
+                na, nb = self.p[ia], self.p[ib]
+                if na == nb:
+                    continue
+                # O(degree) network delta for swapping nodes of a and b.
+                pa, pb = self.p[self.adj[ia]], self.p[self.adj[ib]]
+                delta = (
+                    net[nb, pa].sum()
+                    - net[na, pa].sum()
+                    + net[na, pb].sum()
+                    - net[nb, pb].sum()
+                )
+                # a–b edges were double-counted above but truly contribute 0
+                # (net is symmetric); remove the spurious terms.
+                m_ab = int((self.adj[ia] == ib).sum())
+                if m_ab:
+                    delta -= m_ab * (net[na, na] + net[nb, nb] - 2.0 * net[na, nb])
+                # O(2) memory-overload delta.
+                ma, mb = self.mem[ia], self.mem[ib]
+                ua, ub = self.used_mem[na], self.used_mem[nb]
+                ua2, ub2 = ua - ma + mb, ub - mb + ma
+                d_over = (
+                    max(0.0, ua2 - self.cap_mem[na])
+                    - max(0.0, ua - self.cap_mem[na])
+                    + max(0.0, ub2 - self.cap_mem[nb])
+                    - max(0.0, ub - self.cap_mem[nb])
+                )
+                delta += OVERLOAD_PENALTY * d_over
+                new = cur + delta
+                if new <= cur:
+                    self.p[ia], self.p[ib] = nb, na
+                    self.used_mem[na], self.used_mem[nb] = ua2, ub2
+                    cur = new
+        return {tid: arena.node_ids[self.p[i]] for i, tid in enumerate(self.tids)}

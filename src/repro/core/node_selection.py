@@ -4,10 +4,14 @@ space, anchored on the Ref Node."""
 from __future__ import annotations
 
 import math
-from typing import Dict, Mapping, Optional, Tuple
+from typing import AbstractSet, Dict, Mapping, Optional, Tuple
 
 from .cluster import Cluster, Node
 from .resources import BANDWIDTH, CPU, MEMORY, ResourceVector, weighted_distance
+
+#: Colocate-with-upstream distance discount (DESIGN.md §6.1b) — the default
+#: ``credit`` for both selection twins (NodeSelector and ArenaSelector).
+PEER_CREDIT = 0.75
 
 DEFAULT_SOFT_WEIGHTS: Mapping[str, float] = {
     # Normalizing weights: memory is in MB (thousands), CPU in points
@@ -51,10 +55,21 @@ class NodeSelector:
             task_demand, node.available, weights=self.weights, network_distance=net
         )
 
-    def select(self, task_demand: ResourceVector) -> Optional[Node]:
+    def select(
+        self,
+        task_demand: ResourceVector,
+        credit_nodes: Optional[AbstractSet[str]] = None,
+        credit: float = PEER_CREDIT,
+    ) -> Optional[Node]:
         """Pick argmin-distance feasible node; None if no node satisfies the
         hard constraints (scheduler reports the task unassigned — R-Storm
-        never violates hard constraints, property 2 in §4.1)."""
+        never violates hard constraints, property 2 in §4.1).
+
+        ``credit_nodes`` (first-class peer-credit option, DESIGN.md §6.1b):
+        candidates in the set get their distance multiplied by ``credit``, so
+        among near-equidistant nodes the one already hosting an upstream peer
+        wins — the quadratic-term colocation credit R-Storm+ uses.
+        """
         if self.ref_node is None or not self.cluster.nodes[self.ref_node].alive:
             self._establish_ref_node()
         best: Optional[Node] = None
@@ -65,6 +80,8 @@ class NodeSelector:
             if not node.alive or not node.can_fit_hard(task_demand):
                 continue
             d = self.distance(task_demand, node)
+            if credit_nodes and nid in credit_nodes:
+                d *= credit
             if d < best_d - 1e-12:
                 best, best_d = node, d
         return best

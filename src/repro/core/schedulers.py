@@ -4,6 +4,14 @@ plus beyond-paper variants (DESIGN.md §6).
 Every scheduler is a pure function of (topology, cluster-state): it never
 mutates the cluster it is given unless ``commit=True`` — matching Nimbus
 statelessness (paper §5) and enabling deterministic elastic re-planning.
+
+All schedulers run on the array-backed placement engine
+(:mod:`repro.core.engine`) by default: the cluster is compiled into dense
+arrays once per ``schedule()`` call, node selection is a vectorized masked
+reduction, and planning needs no ``copy.deepcopy(cluster)``.  The dict-based
+``NodeSelector`` path is retained as the reference implementation behind
+``engine="legacy"`` and is pinned bit-identical by the golden-equivalence
+suite.
 """
 
 from __future__ import annotations
@@ -12,11 +20,14 @@ import copy
 import itertools
 import random
 import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
 
 from .assignment import Assignment
 from .cluster import Cluster
-from .node_selection import DEFAULT_SOFT_WEIGHTS, NodeSelector
+from .engine import ArenaSelector, PlacementArena, SwapAnnealer
+from .node_selection import NodeSelector, PEER_CREDIT
 from .registry import (
     KwargField,
     REGISTRY,
@@ -26,9 +37,8 @@ from .registry import (
     scheduler_names,
     validate_scheduler_kwargs,
 )
-from .resources import ResourceVector
-from .topology import Task, Topology
-from .traversal import bfs_topology_traversal, task_selection
+from .topology import Topology
+from .traversal import task_selection
 
 # Shared kwarg schemas.
 _WEIGHTS = KwargField(
@@ -37,6 +47,18 @@ _WEIGHTS = KwargField(
     doc="soft-dimension distance weights (Alg 4), e.g. {'cpu_points': 4e-4}",
 )
 _SEED = KwargField(types=(int,), default=0, minimum=0, doc="PRNG seed")
+_ENGINE = KwargField(
+    types=(str,),
+    default="arena",
+    choices=("arena", "legacy"),
+    doc="placement engine: 'arena' (vectorized array core) or 'legacy' "
+    "(dict-based reference path)",
+)
+
+def _check_engine(engine: str) -> str:
+    if engine not in ("arena", "legacy"):
+        raise ValueError(f"unknown engine {engine!r}")
+    return engine
 
 
 class Scheduler:
@@ -52,7 +74,6 @@ class Scheduler:
         self,
         topology: Topology,
         cluster: Cluster,
-        work: Cluster,
         assignment: Assignment,
         commit: bool,
         t0: float,
@@ -65,20 +86,36 @@ class Scheduler:
         return assignment
 
 
-@register_scheduler("rstorm", kwargs_schema={"weights": _WEIGHTS})
+@register_scheduler("rstorm", kwargs_schema={"weights": _WEIGHTS, "engine": _ENGINE})
 class RStormScheduler(Scheduler):
     """Algorithm 1: taskOrdering = TaskSelection(); for each task, NodeSelection."""
 
-    def __init__(self, weights: Optional[Mapping[str, float]] = None):
+    #: R-Storm+ flips this: upstream-peer colocation credit + per-branch
+    #: Ref-Node anchoring in the shared arena placement loop.
+    _upstream_credit = False
+
+    def __init__(self, weights: Optional[Mapping[str, float]] = None, engine: str = "arena"):
         self.weights = weights
+        self.engine = _check_engine(engine)
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
         t0 = time.perf_counter()
         topology.validate()
-        # Plan against a scratch copy so planning is side-effect free.
+        assignment = Assignment(topology_id=topology.id)
+        if self.engine == "legacy":
+            self._legacy_place(topology, cluster, assignment)
+        else:
+            # Arena path: compile once, then one vectorized reduction per task.
+            # The arena's availability ledger is the scratch state — the real
+            # cluster is never touched until commit.
+            arena = PlacementArena(cluster, topology, self.weights)
+            self._place_on_arena(arena, topology, assignment)
+        return self._finish(topology, cluster, assignment, commit, t0)
+
+    def _legacy_place(self, topology: Topology, cluster: Cluster, assignment: Assignment) -> None:
+        """Reference path: plan against a deep scratch copy."""
         work = copy.deepcopy(cluster)
         selector = NodeSelector(work, self.weights)
-        assignment = Assignment(topology_id=topology.id)
         for task in task_selection(topology):
             d = topology.demand_of(task)
             node = selector.select(d)
@@ -87,7 +124,52 @@ class RStormScheduler(Scheduler):
                 continue
             node.assign(task, d)
             assignment.placements[task.id] = node.id
-        return self._finish(topology, cluster, work, assignment, commit, t0)
+
+    def _place_on_arena(
+        self, arena: PlacementArena, topology: Topology, assignment: Assignment
+    ) -> None:
+        """The one placement loop both R-Storm and R-Storm+ run on the arena."""
+        selector = ArenaSelector(arena)
+        rows: Dict[str, tuple] = {}
+        hosts: Dict[str, np.ndarray] = {}
+        upstream_of = (
+            {cid: set(topology.upstream(cid)) for cid in topology.components}
+            if self._upstream_credit
+            else {}
+        )
+        for task in task_selection(topology):
+            cid = task.component_id
+            if cid not in rows:
+                rows[cid] = arena.compile_demand(
+                    topology.components[cid].resource_demand
+                )
+            row, hard = rows[cid]
+            credit_mask = None
+            for up in upstream_of.get(cid, ()):
+                if up in hosts:
+                    credit_mask = (
+                        hosts[up] if credit_mask is None else credit_mask | hosts[up]
+                    )
+            i = selector.select(row, hard, credit_mask=credit_mask)
+            if i is None:
+                assignment.unassigned.append(task.id)
+                continue
+            arena.assign(i, row)
+            assignment.placements[task.id] = arena.node_ids[i]
+            if self._upstream_credit:
+                if cid not in hosts:
+                    hosts[cid] = np.zeros(len(arena.node_ids), dtype=bool)
+                hosts[cid][i] = True
+                # Per-branch anchoring (DESIGN.md §6.1a).
+                selector.ref_node = i
+
+    def _arena_seed(self, topology: Topology, cluster: Cluster):
+        """(arena, assignment) for callers that keep working on the arena —
+        the annealer reuses the compiled net matrix instead of recompiling."""
+        arena = PlacementArena(cluster, topology, self.weights)
+        assignment = Assignment(topology_id=topology.id)
+        self._place_on_arena(arena, topology, assignment)
+        return arena, assignment
 
 
 @register_scheduler(
@@ -100,6 +182,7 @@ class RStormScheduler(Scheduler):
             choices=("port_major", "node_major"),
             doc="worker-slot ordering; node_major reproduces the §6.3.2 Star bottleneck",
         ),
+        "engine": _ENGINE,
     },
 )
 class RoundRobinScheduler(Scheduler):
@@ -118,43 +201,43 @@ class RoundRobinScheduler(Scheduler):
       machines ... gets over utilized ... and creates a bottleneck").
     """
 
-    def __init__(self, seed: int = 0, slot_mode: str = "port_major"):
+    def __init__(self, seed: int = 0, slot_mode: str = "port_major", engine: str = "arena"):
         if slot_mode not in ("port_major", "node_major"):
             raise ValueError(f"unknown slot_mode {slot_mode!r}")
         self.seed = seed
         self.slot_mode = slot_mode
+        self.engine = _check_engine(engine)
+
+    def _slot_order(self, cluster: Cluster, nodes: List[str]) -> List[str]:
+        """Worker-slot node sequence in the configured order."""
+        if self.slot_mode == "port_major":
+            slots = []
+            max_slots = max(cluster.nodes[n].spec.num_worker_slots for n in nodes)
+            for port in range(max_slots):
+                for n in nodes:
+                    if port < cluster.nodes[n].spec.num_worker_slots:
+                        slots.append(n)
+            return slots
+        return [n for n in nodes for _ in range(cluster.nodes[n].spec.num_worker_slots)]
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
         t0 = time.perf_counter()
         topology.validate()
-        work = copy.deepcopy(cluster)
+        assignment = Assignment(topology_id=topology.id)
+        # Placements depend only on specs and liveness, so both engines share
+        # one loop with no scratch copy (``engine`` kept for API uniformity).
         rng = random.Random(self.seed)
-        nodes = sorted(n.id for n in work.live_nodes())
+        nodes = sorted(n.id for n in cluster.live_nodes())
         if not nodes:
             raise RuntimeError("no live nodes")
         rng.shuffle(nodes)  # 'pseudo-random' starting permutation
-        # Build the slot list in the configured order.
-        if self.slot_mode == "port_major":
-            slots = []
-            max_slots = max(work.nodes[n].spec.num_worker_slots for n in nodes)
-            for port in range(max_slots):
-                for n in nodes:
-                    if port < work.nodes[n].spec.num_worker_slots:
-                        slots.append(n)
-        else:  # node_major
-            slots = [
-                n for n in nodes for _ in range(work.nodes[n].spec.num_worker_slots)
-            ]
-        assignment = Assignment(topology_id=topology.id)
-        cursor = itertools.cycle(slots)
+        cursor = itertools.cycle(self._slot_order(cluster, nodes))
         for task in topology.all_tasks():
-            nid = next(cursor)
-            assignment.placements[task.id] = nid
-            work.nodes[nid].assign(task, topology.demand_of(task))
-        return self._finish(topology, cluster, work, assignment, commit, t0)
+            assignment.placements[task.id] = next(cursor)
+        return self._finish(topology, cluster, assignment, commit, t0)
 
 
-@register_scheduler("rstorm_plus", kwargs_schema={"weights": _WEIGHTS})
+@register_scheduler("rstorm_plus", kwargs_schema={"weights": _WEIGHTS, "engine": _ENGINE})
 class RStormPlusScheduler(RStormScheduler):
     """Beyond-paper variant (DESIGN.md §6.1):
 
@@ -162,24 +245,28 @@ class RStormPlusScheduler(RStormScheduler):
         so wide topologies anchor each branch locally instead of pulling every
         branch toward one global anchor;
     (b) among equidistant candidates, prefers the node already hosting an
-        upstream peer of the task (explicit quadratic-term credit).
+        upstream peer of the task (explicit quadratic-term credit — the
+        ``credit_nodes`` option of node selection).
+
+    The arena path is the shared ``_place_on_arena`` loop with
+    ``_upstream_credit`` on (per-component host masks OR-ed over upstream
+    components as the vector discount).
     """
 
-    def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
-        t0 = time.perf_counter()
-        topology.validate()
+    _upstream_credit = True
+
+    def _legacy_place(self, topology: Topology, cluster: Cluster, assignment: Assignment) -> None:
         work = copy.deepcopy(cluster)
         selector = NodeSelector(work, self.weights)
-        assignment = Assignment(topology_id=topology.id)
         upstream_of = {cid: set(topology.upstream(cid)) for cid in topology.components}
         placed_by_component: Dict[str, List[str]] = {}
         for task in task_selection(topology):
             d = topology.demand_of(task)
-            # (b) credit: nodes hosting upstream peers get a distance discount.
+            # (b) credit: nodes hosting upstream peers get a discount.
             peers = set()
             for up in upstream_of[task.component_id]:
                 peers.update(placed_by_component.get(up, []))
-            node = self._select_with_credit(selector, work, d, peers)
+            node = selector.select(d, credit_nodes=peers, credit=PEER_CREDIT)
             if node is None:
                 assignment.unassigned.append(task.id)
                 continue
@@ -188,25 +275,6 @@ class RStormPlusScheduler(RStormScheduler):
             placed_by_component.setdefault(task.component_id, []).append(node.id)
             # (a) per-branch anchoring.
             selector.ref_node = node.id
-        return self._finish(topology, cluster, work, assignment, commit, t0)
-
-    @staticmethod
-    def _select_with_credit(selector: NodeSelector, work: Cluster, d: ResourceVector, peers) -> Optional[object]:
-        import math
-
-        if selector.ref_node is None or not work.nodes[selector.ref_node].alive:
-            selector._establish_ref_node()
-        best, best_d = None, math.inf
-        for nid in sorted(work.nodes):
-            node = work.nodes[nid]
-            if not node.alive or not node.can_fit_hard(d):
-                continue
-            dist = selector.distance(d, node)
-            if nid in peers:
-                dist *= 0.75  # colocate-with-upstream credit
-            if dist < best_d - 1e-12:
-                best, best_d = node, dist
-        return best
 
 
 @register_scheduler(
@@ -217,6 +285,7 @@ class RStormPlusScheduler(RStormScheduler):
         ),
         "seed": _SEED,
         "weights": _WEIGHTS,
+        "engine": _ENGINE,
     },
 )
 class AnnealedScheduler(Scheduler):
@@ -224,21 +293,54 @@ class AnnealedScheduler(Scheduler):
     minimizing (network cost, soft overload) lexicographically.
 
     Deliberately budgeted (``iters``) to stay within the paper's "snappy
-    scheduling" requirement.
+    scheduling" requirement.  The arena engine evaluates each candidate swap
+    incrementally in O(degree) instead of recomputing the full O(E) network
+    cost, so swap budgets 10-100× larger fit the same wall-clock budget.
     """
 
-    def __init__(self, iters: int = 400, seed: int = 0, weights=None):
+    def __init__(self, iters: int = 400, seed: int = 0, weights=None, engine: str = "arena"):
         self.iters = iters
         self.seed = seed
         self.weights = weights
+        self.engine = _check_engine(engine)
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
         t0 = time.perf_counter()
-        seed_assignment = RStormScheduler(self.weights).schedule(
-            topology, cluster, commit=False
-        )
         rng = random.Random(self.seed)
-        placements = dict(seed_assignment.placements)
+        if self.engine == "legacy":
+            seed_assignment = RStormScheduler(self.weights, engine="legacy").schedule(
+                topology, cluster, commit=False
+            )
+            placements = self._legacy_swap_loop(
+                topology, cluster, dict(seed_assignment.placements), rng
+            )
+        else:
+            # Seed and anneal on one arena: the swap loop only reads the net
+            # matrix and node index, so the seed's compile is reused.
+            topology.validate()
+            arena, seed_assignment = RStormScheduler(self.weights)._arena_seed(
+                topology, cluster
+            )
+            placements = SwapAnnealer(
+                arena, topology, dict(seed_assignment.placements)
+            ).run(self.iters, rng)
+        out = Assignment(
+            topology_id=topology.id,
+            placements=placements,
+            unassigned=list(seed_assignment.unassigned),
+        )
+        # The swap loop never mutates the cluster, so no scratch copy is
+        # needed — commit applies onto the real cluster as usual.
+        return self._finish(topology, cluster, out, commit, t0)
+
+    def _legacy_swap_loop(
+        self,
+        topology: Topology,
+        cluster: Cluster,
+        placements: Dict[str, str],
+        rng: random.Random,
+    ) -> Dict[str, str]:
+        """Reference implementation: full O(E) cost recomputation per swap."""
         tasks = {t.id: t for t in topology.all_tasks()}
         demands = {tid: topology.demand_of(t) for tid, t in tasks.items()}
         tids = sorted(placements)
@@ -269,12 +371,7 @@ class AnnealedScheduler(Scheduler):
                     cur = new
                 else:
                     placements[a], placements[b] = placements[b], placements[a]
-        out = Assignment(
-            topology_id=topology.id,
-            placements=placements,
-            unassigned=list(seed_assignment.unassigned),
-        )
-        return self._finish(topology, cluster, copy.deepcopy(cluster), out, commit, t0)
+        return placements
 
 
 # ``SCHEDULERS`` and ``get_scheduler`` now live on the registry and are
@@ -282,6 +379,7 @@ class AnnealedScheduler(Scheduler):
 __all__ = [
     "AnnealedScheduler",
     "KwargField",
+    "PEER_CREDIT",
     "REGISTRY",
     "RoundRobinScheduler",
     "RStormPlusScheduler",

@@ -132,7 +132,12 @@ def test_allow_partial_false_rejects_infeasible_plan_whole():
     with pytest.raises(UnschedulablePayloadError, match="nothing was committed"):
         nimbus.submit(huge)
     assert nimbus.topologies == []
-    assert cluster_is_pristine(nimbus.cluster)
+    # A rejected submit leaves an empty Nimbus truly empty: it must not have
+    # adopted the rejected payload's cluster...
+    assert nimbus.cluster is None
+    # ...so a later submit against a *different* cluster is still accepted.
+    plan = nimbus.submit(payload(preset="emulab_24"))
+    assert plan.committed and nimbus.topologies == ["pageload"]
 
 
 def test_mismatched_cluster_spec_rejected():

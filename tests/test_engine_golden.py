@@ -1,0 +1,194 @@
+"""Golden-equivalence suite: the array-backed engine must reproduce the
+legacy dict path's *exact* placements, unassigned sets and network cost for
+every registered scheduler across the benchmark topologies (chain, star,
+Yahoo, multi-topology), plus arena unit tests (ledger, net matrix, select).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Assignment,
+    Cluster,
+    Component,
+    GlobalState,
+    NodeSpec,
+    PlacementArena,
+    Topology,
+    demand,
+    emulab_cluster,
+    emulab_cluster_24,
+    get_scheduler,
+    scheduler_names,
+)
+from repro.stream import topologies as T
+
+
+def chain_topology(components=6, parallelism=5, mem=128.0, cpu=10.0):
+    t = Topology(f"chain{components}x{parallelism}")
+    prev = None
+    for i in range(components):
+        c = Component(f"c{i}", is_spout=(i == 0), parallelism=parallelism)
+        c.set_memory_load(mem).set_cpu_load(cpu)
+        t.add_component(c)
+        if prev:
+            t.add_edge(prev, c.id)
+        prev = c.id
+    return t
+
+
+def hetero_cluster():
+    """Mixed capacities/racks — exercises non-tied ref-node selection."""
+    specs = []
+    for r, (cpu, mem) in enumerate([(100.0, 2048.0), (200.0, 4096.0), (50.0, 1024.0)]):
+        for n in range(4):
+            specs.append(
+                NodeSpec(
+                    node_id=f"r{r}n{n}",
+                    rack_id=f"rack{r}",
+                    cpu_capacity=cpu,
+                    memory_capacity_mb=mem,
+                )
+            )
+    return Cluster(specs)
+
+
+CASES = [
+    ("chain", lambda: chain_topology(), emulab_cluster),
+    ("chain_big", lambda: chain_topology(10, 10), lambda: Cluster.homogeneous(racks=4, nodes_per_rack=8, memory_mb=8192.0, cpu=400.0)),
+    ("linear_net", lambda: T.linear(True), emulab_cluster),
+    ("linear_cpu", lambda: T.linear(False), emulab_cluster),
+    ("diamond_net", lambda: T.diamond(True), emulab_cluster),
+    ("star_net", lambda: T.star(True), emulab_cluster),
+    ("star_cpu", lambda: T.star(False), emulab_cluster),
+    ("pageload", T.pageload, emulab_cluster_24),
+    ("processing", T.processing, emulab_cluster_24),
+    ("hetero", lambda: chain_topology(4, 6, mem=700.0, cpu=40.0), hetero_cluster),
+    ("infeasible", lambda: chain_topology(3, 3, mem=8192.0), emulab_cluster),
+]
+
+#: Non-default kwargs per scheduler (kept small so the suite stays fast).
+SCHED_KWARGS = {"rstorm_annealed": {"iters": 250}, "round_robin": {"seed": 3}}
+
+
+def both_engines(name, topology, cluster):
+    kwargs = SCHED_KWARGS.get(name, {})
+    a = get_scheduler(name, engine="arena", **kwargs).schedule(
+        topology, cluster, commit=False
+    )
+    cluster.reset()
+    b = get_scheduler(name, engine="legacy", **kwargs).schedule(
+        topology, cluster, commit=False
+    )
+    return a, b
+
+
+@pytest.mark.parametrize("case", [c[0] for c in CASES])
+@pytest.mark.parametrize("name", scheduler_names())
+def test_arena_reproduces_legacy_placements(case, name):
+    _, topo_factory, cluster_factory = next(c for c in CASES if c[0] == case)
+    topology = topo_factory()
+    cluster = cluster_factory()
+    a, b = both_engines(name, topology, cluster)
+    assert a.placements == b.placements
+    assert sorted(a.unassigned) == sorted(b.unassigned)
+    assert a.network_cost(topology, cluster) == b.network_cost(topology, cluster)
+
+
+@pytest.mark.parametrize("name", scheduler_names())
+def test_arena_reproduces_legacy_after_node_failure(name):
+    """Dead nodes flow through the alive mask and ref-node re-establishment."""
+    results = []
+    for engine in ("arena", "legacy"):
+        cluster = emulab_cluster()
+        get_scheduler("rstorm", engine=engine).schedule(
+            chain_topology(3, 4, mem=256.0), cluster, commit=True
+        )
+        cluster.fail_node("r0n0")
+        a = get_scheduler(name, engine=engine, **SCHED_KWARGS.get(name, {})).schedule(
+            T.linear(True), cluster, commit=False
+        )
+        results.append((dict(a.placements), sorted(a.unassigned)))
+        assert "r0n0" not in a.placements.values()
+    assert results[0] == results[1]
+
+
+def test_multi_topology_submission_identical_end_state():
+    """§6.5: sequential submits see already-decremented availability."""
+    def run(engine):
+        state = GlobalState(emulab_cluster_24())
+        sched = get_scheduler("rstorm", engine=engine)
+        a1 = state.submit(T.pageload(), sched)
+        a2 = state.submit(T.processing(), sched)
+        avail = {nid: dict(n.available.values) for nid, n in state.cluster.nodes.items()}
+        return dict(a1.placements), dict(a2.placements), avail
+
+    assert run("arena") == run("legacy")
+
+
+# -- arena unit tests ----------------------------------------------------------
+def test_net_matrix_matches_cluster_network_distance():
+    cluster = emulab_cluster()
+    arena = PlacementArena(cluster)
+    for i, a in enumerate(arena.node_ids):
+        for j, b in enumerate(arena.node_ids):
+            assert arena.net[i, j] == cluster.network_distance(a, b)
+
+
+def test_ledger_snapshot_rollback_restores_exactly():
+    arena = PlacementArena(emulab_cluster())
+    row, _ = arena.compile_demand(demand(512.0, 30.0, 1.0))
+    snap = arena.snapshot()
+    before = arena.avail.copy()
+    for i in (0, 3, 3, 7):
+        arena.assign(i, row)
+    assert not np.array_equal(arena.avail, before)
+    arena.rollback(snap)
+    assert np.array_equal(arena.avail, before)
+    # snapshot is a copy, not a view — later assigns must not corrupt it.
+    arena.assign(1, row)
+    assert np.array_equal(snap, before)
+
+
+def test_select_returns_none_when_infeasible():
+    arena = PlacementArena(emulab_cluster())
+    row, hard = arena.compile_demand(demand(99999.0, 1.0))
+    assert arena.select(row, hard, ref_idx=0) is None
+
+
+def test_select_skips_dead_nodes():
+    cluster = emulab_cluster()
+    arena = PlacementArena(cluster)
+    row, hard = arena.compile_demand(demand(128.0, 10.0))
+    ref = arena.establish_ref_node()
+    first = arena.select(row, hard, ref)
+    arena.alive[first] = False
+    second = arena.select(row, hard, ref)
+    assert second is not None and second != first
+
+
+def test_arena_network_cost_matches_assignment():
+    topology = chain_topology(4, 3)
+    cluster = emulab_cluster()
+    a = get_scheduler("rstorm").schedule(topology, cluster, commit=False)
+    arena = PlacementArena(cluster, topology)
+    tids = sorted(a.placements)
+    tindex = {tid: i for i, tid in enumerate(tids)}
+    placement = np.array([arena.index[a.placements[t]] for t in tids])
+    edges = np.array(
+        [
+            [tindex[s.id], tindex[d.id]]
+            for s, d in topology.task_edges()
+            if s.id in tindex and d.id in tindex
+        ]
+    )
+    assert arena.network_cost(placement, edges) == a.network_cost(topology, cluster)
+
+
+def test_engine_kwarg_validated_by_registry():
+    with pytest.raises(TypeError, match="engine"):
+        get_scheduler("rstorm", engine="turbo")
+    with pytest.raises(ValueError, match="unknown engine"):
+        from repro.core import RStormScheduler
+
+        RStormScheduler(engine="turbo")

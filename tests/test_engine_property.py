@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the placement engine (skipped when the
+``hypothesis`` dependency is absent — the container does not bake it in).
+
+The load-bearing invariant: the availability ledger's snapshot/rollback
+always restores availability *exactly* (bit-for-bit), for any interleaving
+of assigns/unassigns — this is what lets "plan on a scratch copy" become a
+cheap array snapshot instead of ``copy.deepcopy(cluster)``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Cluster, PlacementArena, demand, get_scheduler  # noqa: E402
+
+from test_schedulers import linear_topology  # noqa: E402
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    racks=st.integers(1, 4),
+    npr=st.integers(1, 6),
+    ops=st.lists(
+        st.tuples(
+            st.integers(0, 23),  # node slot (mod node count)
+            st.floats(0.0, 4096.0, allow_nan=False),
+            st.floats(0.0, 200.0, allow_nan=False),
+            st.booleans(),  # assign vs unassign
+        ),
+        max_size=40,
+    ),
+)
+def test_property_ledger_rollback_restores_availability_exactly(racks, npr, ops):
+    arena = PlacementArena(Cluster.homogeneous(racks=racks, nodes_per_rack=npr))
+    before = arena.avail.copy()
+    snap = arena.snapshot()
+    n = len(arena.node_ids)
+    for slot, mem, cpu, is_assign in ops:
+        row, _ = arena.compile_demand(demand(mem, cpu, 1.0))
+        if is_assign:
+            arena.assign(slot % n, row)
+        else:
+            arena.unassign(slot % n, row)
+    arena.rollback(snap)
+    # Bit-exact equality, not approx: rollback is a restore, not a recompute.
+    assert np.array_equal(arena.avail, before)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_bolts=st.integers(1, 5),
+    par=st.integers(1, 6),
+    mem=st.floats(16.0, 1024.0, allow_nan=False),
+    cpu=st.floats(1.0, 120.0, allow_nan=False),
+    racks=st.integers(1, 4),
+    npr=st.integers(1, 8),
+)
+def test_property_arena_matches_legacy_rstorm(n_bolts, par, mem, cpu, racks, npr):
+    t = linear_topology(n_bolts=n_bolts, parallelism=par, mem=mem, cpu=cpu)
+    cl = Cluster.homogeneous(racks=racks, nodes_per_rack=npr)
+    a = get_scheduler("rstorm", engine="arena").schedule(t, cl, commit=False)
+    cl.reset()
+    b = get_scheduler("rstorm", engine="legacy").schedule(t, cl, commit=False)
+    assert a.placements == b.placements
+    assert sorted(a.unassigned) == sorted(b.unassigned)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100), iters=st.integers(1, 200))
+def test_property_arena_matches_legacy_annealer(seed, iters):
+    t = linear_topology(n_bolts=3, parallelism=4)
+    cl = Cluster.homogeneous(racks=2, nodes_per_rack=6)
+    a = get_scheduler("rstorm_annealed", engine="arena", seed=seed, iters=iters).schedule(
+        t, cl, commit=False
+    )
+    cl.reset()
+    b = get_scheduler("rstorm_annealed", engine="legacy", seed=seed, iters=iters).schedule(
+        t, cl, commit=False
+    )
+    assert a.placements == b.placements
