@@ -1,0 +1,161 @@
+"""Dynamic-scenario sweeps (§3 failure recovery + §6.5 multi-tenant churn),
+each expressed as one declarative ``ScenarioSpec`` timeline and replayed
+through ``ScenarioRunner`` for every registered scheduler:
+
+* ``failover``     — submit PageLoad, kill two workers, rebalance; how much
+  throughput survives the failure and comes back after re-placement;
+* ``elastic``      — submit onto a too-small cluster (tasks stay unplaced),
+  then join a fresh rack; elastic scale-up must land every task;
+* ``multi_tenant`` — the paper's §6.5 experiment as a timeline: PageLoad and
+  Processing share a 24-node cluster, then survive node churn.  The
+  ``default_node_major`` row reproduces the paper's catastrophic outcome
+  (memory over-subscription thrashes machines; Processing "grinded to a
+  near halt") with the representative seeds from bench_multi_topology.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.api import (
+    ClusterSpec,
+    NodeEntry,
+    NodeFailEvent,
+    NodeJoinEvent,
+    RebalanceEvent,
+    ScenarioRunner,
+    ScenarioSpec,
+    SchedulerSpec,
+    SubmitEvent,
+)
+from repro.stream import topologies
+
+from .bench_multi_topology import NODE_MAJOR_SEEDS
+from .common import DEFAULT_MATRIX, EMULAB_12, EMULAB_24, emit_csv_row
+
+#: The §6.5 sweep: the standard matrix plus the paper's collapse row.
+MULTI_TENANT_MATRIX = DEFAULT_MATRIX + [
+    (
+        "default_node_major",
+        "round_robin",
+        {"seed": NODE_MAJOR_SEEDS[0], "slot_mode": "node_major"},
+    ),
+]
+
+
+def _tp(entry, topo_id: str) -> float:
+    return entry.topologies.get(topo_id, {}).get("sink_throughput", 0.0)
+
+
+def failover_scenario(name: str, kwargs: dict) -> ScenarioSpec:
+    return ScenarioSpec(
+        name=f"failover_{name}",
+        cluster=EMULAB_12,
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec(name, dict(kwargs)),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            NodeFailEvent(node_id="r0n1"),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def elastic_scenario(name: str, kwargs: dict) -> ScenarioSpec:
+    # 3 x 2 GB nodes cannot hold PageLoad (~8.4 GB): tasks stay unplaced
+    # until the fresh rack joins.
+    return ScenarioSpec(
+        name=f"elastic_{name}",
+        cluster=ClusterSpec(racks=1, nodes_per_rack=3),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec(name, dict(kwargs)),
+            ),
+            NodeJoinEvent(
+                nodes=tuple(NodeEntry(f"fresh{i}", "rack_fresh") for i in range(4))
+            ),
+        ),
+    )
+
+
+def multi_tenant_scenario(name: str, kwargs: dict) -> ScenarioSpec:
+    kw_pl, kw_pr = dict(kwargs), dict(kwargs)
+    if "seed" in kw_pr:  # two independent pseudo-random placements (§6.5)
+        seeds = (
+            NODE_MAJOR_SEEDS if kw_pr.get("slot_mode") == "node_major" else (1, 7)
+        )
+        kw_pl["seed"], kw_pr["seed"] = seeds
+    return ScenarioSpec(
+        name=f"multi_tenant_{name}",
+        cluster=EMULAB_24,
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec(name, kw_pl),
+            ),
+            SubmitEvent(
+                topology=topologies.spec("processing"),
+                scheduler=SchedulerSpec(name, kw_pr),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def run() -> Dict[str, object]:
+    out: Dict[str, object] = {}
+
+    for label, name, kwargs in DEFAULT_MATRIX:
+        trace = ScenarioRunner(failover_scenario(name, kwargs)).run()
+        out[f"failover/{label}"] = trace
+        submit, fail2, rebal = trace.entries[0], trace.entries[2], trace.entries[3]
+        orphans = sum(
+            len(e.outcome.get("orphaned", ())) for e in trace.entries[1:3]
+        )
+        emit_csv_row(
+            f"scenario_failover/{label}",
+            0.0,
+            f"tp_initial={_tp(submit, 'pageload'):.1f}tuples/s;"
+            f"tp_degraded={_tp(fail2, 'pageload'):.1f};"
+            f"tp_recovered={_tp(rebal, 'pageload'):.1f};"
+            f"orphans={orphans};"
+            f"moved={sum(len(v) for v in rebal.outcome.get('moved', {}).values())};"
+            f"unplaced={sum(len(v) for v in rebal.unplaced.values())}",
+        )
+
+    for label, name, kwargs in DEFAULT_MATRIX:
+        trace = ScenarioRunner(elastic_scenario(name, kwargs)).run()
+        out[f"elastic/{label}"] = trace
+        submit, join = trace.entries[0], trace.entries[1]
+        emit_csv_row(
+            f"scenario_elastic/{label}",
+            0.0,
+            f"unplaced_initial={sum(len(v) for v in submit.unplaced.values())};"
+            f"unplaced_final={sum(len(v) for v in join.unplaced.values())};"
+            f"tp_initial={_tp(submit, 'pageload'):.1f}tuples/s;"
+            f"tp_final={_tp(join, 'pageload'):.1f}",
+        )
+
+    for label, name, kwargs in MULTI_TENANT_MATRIX:
+        trace = ScenarioRunner(multi_tenant_scenario(name, kwargs)).run()
+        out[f"multi_tenant/{label}"] = trace
+        both, churned = trace.entries[1], trace.entries[3]
+        emit_csv_row(
+            f"scenario_multitenant/{label}",
+            0.0,
+            f"pageload={_tp(both, 'pageload'):.1f}tuples/s;"
+            f"processing={_tp(both, 'processing'):.1f};"
+            f"thrashed={len(both.topologies.get('processing', {}).get('thrashed_nodes', ()))};"
+            f"after_churn_pageload={_tp(churned, 'pageload'):.1f};"
+            f"after_churn_processing={_tp(churned, 'processing'):.1f}",
+        )
+
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ BENCHES = [
     "benchmarks.bench_cpu_bound",        # Fig 9 + 10
     "benchmarks.bench_yahoo",            # Fig 12
     "benchmarks.bench_multi_topology",   # Fig 13
+    "benchmarks.bench_scenarios",        # §3/§6.5 dynamic scenario timelines
     "benchmarks.bench_scheduler_overhead",
     "benchmarks.bench_placement",        # mesh-placement quality (DESIGN §2.2)
     "benchmarks.bench_kernels",          # Pallas kernel oracles
@@ -20,6 +21,7 @@ BENCHES = [
 SMOKE_BENCHES = [
     "benchmarks.bench_network_bound",
     "benchmarks.bench_yahoo",
+    "benchmarks.bench_scenarios",   # failure/churn/scale-up timelines (~3 s)
 ]
 
 

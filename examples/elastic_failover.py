@@ -1,84 +1,109 @@
-"""Fault-tolerance walkthrough (DESIGN.md §5), on the Nimbus facade:
-
-1. submit the Yahoo PageLoad topology as a declarative payload;
-2. kill a worker node — ``Nimbus.rebalance()`` re-places only the orphans;
-3. detect and migrate a straggler via the StatisticServer feed;
-4. scale the cluster up elastically and watch unassigned tasks land;
-5. kill the topology — its resources return to the cluster.
+"""Fault-tolerance walkthrough (DESIGN.md §5) as one declarative scenario:
+the whole cluster lifecycle — submit, node failure, rebalance, straggler
+migration, mass failure, elastic scale-up, kill — is a ``ScenarioSpec``
+timeline (pure data, JSON-round-trippable) replayed by ``ScenarioRunner``
+through the single ``Nimbus.apply(event)`` dispatcher.
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
 
 from repro.api import (
     ClusterSpec,
+    KillEvent,
     Nimbus,
-    RunSettings,
+    NodeEntry,
+    NodeFailEvent,
+    NodeJoinEvent,
+    RebalanceEvent,
+    ScenarioRunner,
+    ScenarioSpec,
     SchedulerSpec,
     SchedulingPayload,
-    TopologySpec,
+    StragglerReportEvent,
+    SubmitEvent,
 )
-from repro.core import NodeSpec, Rescheduler, StragglerMitigator
-from repro.stream import Simulator, topologies
+from repro.stream import topologies
+
+CLUSTER = ClusterSpec(preset="emulab_12")
 
 
-def show(sim, topo, assignment, label):
-    res = sim.run(topo, assignment)
-    print(
-        f"  [{label}] throughput={res.sink_throughput:8.1f}/s "
-        f"machines={res.machines_used} binding={res.binding} "
-        f"unassigned={len(assignment.unassigned)}"
+def build_scenario() -> ScenarioSpec:
+    topo_spec = topologies.spec("pageload")
+    # Pick the failure victims from a dry-run plan (deterministic for rstorm),
+    # then freeze them into the timeline — the scenario itself is static data.
+    plan = Nimbus().plan(
+        SchedulingPayload(
+            topology=topo_spec, cluster=CLUSTER, scheduler=SchedulerSpec("rstorm")
+        )
     )
-    return res
+    victim = sorted(set(plan.placements.values()))[0]
+    # 8 of the 12 nodes die in total: 4 × 2 GB survivors cannot hold
+    # PageLoad's ~8.4 GB, so tasks stay unplaced until a fresh rack joins.
+    doomed = [nid for nid in sorted(CLUSTER.to_cluster().nodes) if nid != victim][:7]
+    service_times = {tid: 0.002 for tid in plan.placements}
+    straggler = sorted(plan.placements)[0]
+    service_times[straggler] = 1.0  # 500x the component median
+
+    return ScenarioSpec(
+        name="elastic_failover",
+        cluster=CLUSTER,
+        timeline=(
+            SubmitEvent(topology=topo_spec, scheduler=SchedulerSpec("rstorm")),
+            NodeFailEvent(node_id=victim),
+            RebalanceEvent(),
+            StragglerReportEvent(service_times=service_times),
+            *[NodeFailEvent(node_id=nid) for nid in doomed],
+            RebalanceEvent(),
+            NodeJoinEvent(
+                nodes=tuple(NodeEntry(f"fresh{i}", "rack_fresh") for i in range(6))
+            ),
+            KillEvent(topology_id="pageload"),
+        ),
+    )
 
 
 def main() -> None:
-    payload = SchedulingPayload(
-        topology=TopologySpec.from_topology(topologies.pageload()),
-        cluster=ClusterSpec(preset="emulab_12"),
-        scheduler=SchedulerSpec("rstorm"),
-        settings=RunSettings(allow_partial=True),
-    )
-    nimbus = Nimbus()
-    print(f"1) submitting {payload.topology.id!r} via Nimbus")
-    plan = nimbus.submit(payload)
-    topo, assignment = plan.topology, plan.assignment
-    sim = Simulator(nimbus.cluster)
-    show(sim, topo, assignment, "initial")
+    spec = build_scenario()
 
-    victim = sorted(set(assignment.placements.values()))[0]
-    print(f"\n2) node failure: {victim}")
-    nimbus.cluster.fail_node(victim)
-    orphans = nimbus.state.orphaned_tasks()  # (topology_id, task_id) pairs
-    print(f"   orphaned: {[tid for _, tid in orphans]}")
-    moved = nimbus.rebalance()
-    print(f"   migrated tasks: {moved.get(topo.id, [])}")
-    show(sim, topo, assignment, "after failover")
+    # The scenario is data: it survives a JSON round-trip losslessly and the
+    # replay is deterministic — same timeline, same trace, bit for bit.
+    replayed = ScenarioSpec.from_json(spec.to_json())
+    assert replayed.to_dict() == spec.to_dict()
+    trace = ScenarioRunner(spec).run()
+    assert ScenarioRunner(replayed).run().to_dict() == trace.to_dict()
 
-    print("\n3) straggler mitigation")
-    times = {t.id: 0.002 for t in topo.all_tasks()}
-    straggler = next(iter(assignment.placements))
-    times[straggler] = 1.0
-    mit = StragglerMitigator(nimbus.state)
-    found = mit.find_stragglers(times)
-    moves = mit.migrate(found)
-    print(f"   detected {found} -> moved to {list(moves.values())}")
+    print(f"replaying {spec.name!r}: {len(spec.timeline)} events\n")
+    for entry in trace.entries:
+        kind = entry.event["kind"]
+        tp = entry.topologies.get("pageload", {}).get("sink_throughput")
+        tp_s = f"{tp:8.1f}/s" if tp is not None else "   (none)"
+        moved = sum(len(v) for v in entry.outcome.get("moved", {}).values())
+        unplaced = sum(len(v) for v in entry.unplaced.values())
+        detail = []
+        if kind == "node_fail":
+            detail.append(
+                f"{entry.event['node_id']} down, "
+                f"{len(entry.outcome['orphaned'])} orphans"
+            )
+        if kind == "node_join":
+            detail.append(f"+{len(entry.event['nodes'])} nodes")
+        if kind == "straggler_report":
+            detail.append(f"migrated {entry.outcome['moves']}")
+        if moved:
+            detail.append(f"moved={moved}")
+        print(
+            f"  [{entry.step:2d}] {kind:17s} throughput={tp_s} "
+            f"machines={entry.machines_used:2d} alive={entry.alive_nodes:2d} "
+            f"unplaced={unplaced:2d}  {'; '.join(detail)}"
+        )
 
-    print("\n4) elastic scale-up: fail half the cluster, then add a fresh rack")
-    resch = Rescheduler(nimbus.state)
-    for nid in list(assignment.nodes_used())[:3]:
-        resch.handle_node_failure(nid)
-    print(f"   after failures: unassigned={len(assignment.unassigned)}")
-    resch.handle_scale_up(
-        [NodeSpec(f"fresh{i}", "rack_fresh", 100.0, 2048.0) for i in range(6)]
-    )
-    show(sim, topo, assignment, "after scale-up")
-    assert assignment.is_complete(topo)
-
-    print("\n5) kill: resources return to the cluster")
-    nimbus.kill(topo.id)
-    free = nimbus.cluster.total_available()["memory_mb"]
-    print(f"   topologies={nimbus.topologies}, free memory={free:.0f} MB")
-    print("\nall tasks placed; the plan is a pure function of (topology, cluster).")
+    # After the fresh rack joined, everything was re-placed...
+    scale_up = next(e for e in trace.entries if e.event["kind"] == "node_join")
+    assert scale_up.unplaced == {}, "scale-up must land every task"
+    # ...and the kill returned all resources.
+    assert trace.final().topologies == {}
+    print("\nevery task re-placed after scale-up; kill returned the cluster.")
+    print("the trace is a pure function of the scenario JSON.")
 
 
 if __name__ == "__main__":

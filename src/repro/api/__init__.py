@@ -1,7 +1,9 @@
 # Public control-plane surface: one validated SchedulingPayload contract,
-# the pluggable scheduler registry, and the Nimbus submit/plan/kill/rebalance
-# facade.  This is the API new schedulers, clusters and workloads plug into
-# as data rather than code.
+# the pluggable scheduler registry, the Nimbus lifecycle facade
+# (submit/plan/kill/fail_node/add_nodes/rebalance/migrate_stragglers/apply),
+# and the event-sourced scenario timeline (ScenarioSpec -> ScenarioRunner ->
+# ScenarioTrace).  This is the API new schedulers, clusters, workloads and
+# whole dynamic scenarios plug into as data rather than code.
 from ..core.registry import (
     KwargField,
     REGISTRY,
@@ -11,8 +13,28 @@ from ..core.registry import (
     scheduler_names,
     validate_scheduler_kwargs,
 )
-from .errors import PayloadValidationError, UnschedulablePayloadError
-from .nimbus import Nimbus, SchedulingPlan
+from ..core.rescheduler import RebalanceResult
+from .errors import (
+    PayloadValidationError,
+    ScenarioReplayError,
+    UnschedulablePayloadError,
+)
+from .nimbus import Nimbus, SchedulingPlan, SimSummary
+from .scenario import (
+    EVENT_TYPES,
+    KillEvent,
+    NodeFailEvent,
+    NodeJoinEvent,
+    RebalanceEvent,
+    ScenarioRunner,
+    ScenarioSpec,
+    ScenarioTrace,
+    ScenarioTraceEntry,
+    StragglerReportEvent,
+    SubmitEvent,
+    WeightsChangeEvent,
+    run_scenario,
+)
 from .specs import (
     CLUSTER_PRESETS,
     ClusterSpec,
@@ -29,21 +51,37 @@ __all__ = [
     "CLUSTER_PRESETS",
     "ClusterSpec",
     "ComponentSpec",
+    "EVENT_TYPES",
     "EdgeSpec",
+    "KillEvent",
     "KwargField",
     "Nimbus",
     "NodeEntry",
+    "NodeFailEvent",
+    "NodeJoinEvent",
     "PayloadValidationError",
     "REGISTRY",
+    "RebalanceEvent",
+    "RebalanceResult",
     "RunSettings",
+    "ScenarioReplayError",
+    "ScenarioRunner",
+    "ScenarioSpec",
+    "ScenarioTrace",
+    "ScenarioTraceEntry",
     "SchedulerEntry",
     "SchedulerSpec",
     "SchedulingPayload",
     "SchedulingPlan",
+    "SimSummary",
+    "StragglerReportEvent",
+    "SubmitEvent",
     "TopologySpec",
     "UnschedulablePayloadError",
+    "WeightsChangeEvent",
     "get_scheduler",
     "register_scheduler",
+    "run_scenario",
     "scheduler_names",
     "validate_scheduler_kwargs",
 ]

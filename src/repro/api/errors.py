@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 
 class PayloadValidationError(ValueError):
@@ -18,6 +18,22 @@ class PayloadValidationError(ValueError):
         super().__init__(
             "invalid SchedulingPayload:\n  - " + "\n  - ".join(self.errors)
         )
+
+
+class ScenarioReplayError(RuntimeError):
+    """A scenario event could not be applied to the live cluster state.
+
+    Raised by ``Nimbus.apply`` for events that are structurally valid but
+    impossible in the current state (unknown event kind, no cluster
+    established, an event referencing state the timeline never created).
+    ``ScenarioSpec.validate`` catches the statically-detectable cases before
+    any replay starts; this error covers the dynamic remainder.
+    """
+
+    def __init__(self, message: str, step: Optional[int] = None):
+        self.step = step
+        prefix = f"timeline[{step}]: " if step is not None else ""
+        super().__init__(prefix + message)
 
 
 class UnschedulablePayloadError(RuntimeError):

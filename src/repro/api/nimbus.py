@@ -1,14 +1,18 @@
 """The Nimbus control-plane facade (paper §5: a stateless Nimbus turns a
 declarative topology + cluster description into a placement).
 
-``Nimbus`` wraps ``GlobalState`` behind four verbs:
+``Nimbus`` wraps ``GlobalState`` behind the cluster-lifecycle verbs:
 
 * ``plan(payload)``   — dry-run: schedule against a scratch copy, commit
   nothing (the cluster and the global state are untouched);
 * ``submit(payload)`` — plan, then atomically commit (paper §4.1);
 * ``kill(topology_id)`` — remove a topology, returning its resources;
-* ``rebalance()``     — re-place orphaned/unassigned tasks after failures
-  or elastic scale-up.
+* ``fail_node(node_id)`` — mark a worker dead, reporting its orphans;
+* ``add_nodes(specs)``  — elastic scale-up, re-placing unassigned tasks;
+* ``rebalance()``     — re-place orphaned/unassigned tasks (paper §3);
+* ``migrate_stragglers(service_times)`` — DESIGN.md §5 mitigation;
+* ``apply(event)``    — dispatch one typed scenario event (the event-sourced
+  timeline entry point used by ``repro.api.scenario.ScenarioRunner``).
 
 Both plan and submit return a ``SchedulingPlan`` report: placements,
 unassigned tasks, per-node utilization, network cost and schedule time.
@@ -17,17 +21,35 @@ unassigned tasks, per-node utilization, network cost and schedule time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.assignment import Assignment
 from ..core.cluster import Cluster
 from ..core.multitopology import GlobalState
 from ..core.registry import get_scheduler
-from ..core.rescheduler import Rescheduler
+from ..core.rescheduler import RebalanceResult, Rescheduler, StragglerMitigator
 from ..core.resources import BANDWIDTH, CPU, MEMORY
 from ..core.topology import Topology
-from .errors import PayloadValidationError, UnschedulablePayloadError
+from .errors import (
+    PayloadValidationError,
+    ScenarioReplayError,
+    UnschedulablePayloadError,
+)
 from .specs import ClusterSpec, SchedulingPayload
+
+
+@dataclasses.dataclass
+class SimSummary:
+    """The serialized projection of a ``stream.simulator.SimResult`` — what
+    ``SchedulingPlan.to_dict`` keeps of a simulation, and what
+    ``SchedulingPlan.from_dict`` reconstructs (the full SimResult carries
+    live per-node detail that is not part of the plan contract)."""
+
+    sink_throughput: float
+    binding: str
+    latency_s: float
+    machines_used: int
+    avg_cpu_utilization: float
 
 
 @dataclasses.dataclass
@@ -85,6 +107,32 @@ class SchedulingPlan:
         return out
 
     @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SchedulingPlan":
+        """Rebuild a plan from its ``to_dict`` form (lossless round-trip:
+        ``from_dict(p.to_dict()).to_dict() == p.to_dict()``).
+
+        The live ``assignment``/``topology`` objects are not part of the dict
+        contract and come back as None; an attached sim is reconstructed as a
+        ``SimSummary``.  ``machines_used`` is derived from placements, so the
+        stored value is ignored.
+        """
+        d = dict(d)
+        sim = d.get("sim")
+        return cls(
+            topology_id=d["topology_id"],
+            scheduler_name=d["scheduler_name"],
+            committed=d["committed"],
+            placements=dict(d["placements"]),
+            unassigned=list(d["unassigned"]),
+            network_cost=d["network_cost"],
+            schedule_time_s=d["schedule_time_s"],
+            node_utilization={
+                nid: dict(dims) for nid, dims in d["node_utilization"].items()
+            },
+            sim=SimSummary(**sim) if sim is not None else None,
+        )
+
+    @classmethod
     def from_assignment(
         cls,
         assignment: Assignment,
@@ -135,6 +183,9 @@ class Nimbus:
 
     def __init__(self, cluster: Union[Cluster, ClusterSpec, None] = None):
         self._cluster_spec: Optional[ClusterSpec] = None
+        #: Soft-constraint weights used by rebalance/migration (Alg 4's user
+        #: weights); updated by ``set_weights`` / a ``WeightsChangeEvent``.
+        self._weights: Optional[Dict[str, float]] = None
         if isinstance(cluster, ClusterSpec):
             errors = cluster.validate("cluster")
             if errors:
@@ -254,16 +305,80 @@ class Nimbus:
             )
         return self.state.kill(topology_id)
 
-    def rebalance(self, weights=None) -> Dict[str, List[str]]:
+    def fail_node(self, node_id: str) -> List[Tuple[str, str]]:
+        """Mark a worker node dead (paper §3 failure injection).
+
+        Returns the orphaned (topology_id, task_id) pairs; call
+        ``rebalance()`` to re-place them on the survivors."""
+        if self.state is None or node_id not in self.state.cluster.nodes:
+            raise KeyError(
+                f"unknown node {node_id!r}; have "
+                f"{sorted(self.state.cluster.nodes) if self.state else []}"
+            )
+        return self.state.fail_node(node_id)
+
+    def add_nodes(self, node_specs: Sequence[Any], weights=None) -> RebalanceResult:
+        """Elastic scale-up: join fresh nodes, then re-place any unassigned
+        tasks.  Accepts core ``NodeSpec``s or API ``NodeEntry``s."""
+        if self.state is None:
+            raise ScenarioReplayError(
+                "add_nodes needs a live cluster; construct Nimbus(cluster) "
+                "or submit a payload first"
+            )
+        specs = [
+            n.to_node_spec() if hasattr(n, "to_node_spec") else n
+            for n in node_specs
+        ]
+        result = Rescheduler(
+            self.state, weights if weights is not None else self._weights
+        ).handle_scale_up(specs)
+        # The live node set changed; keep the recorded spec in sync so later
+        # payload-vs-cluster mismatch checks compare against reality.
+        self._cluster_spec = ClusterSpec.from_cluster(self.state.cluster)
+        return result
+
+    def rebalance(self, weights=None) -> RebalanceResult:
         """Re-place orphaned (dead-node) and unassigned tasks.
 
-        Returns per-topology lists of task ids that were moved."""
+        Returns a ``RebalanceResult`` with disjoint per-topology ``moved``
+        and ``unplaced`` task-id lists."""
         if self.state is None:
-            return {}
-        return Rescheduler(self.state, weights).rebalance()
+            return RebalanceResult()
+        return Rescheduler(
+            self.state, weights if weights is not None else self._weights
+        ).rebalance()
 
-    def simulate_all(self) -> Dict[str, Any]:
-        """Joint steady-state simulation of every committed topology (§6.5)."""
+    def migrate_stragglers(
+        self,
+        service_times: Mapping[str, float],
+        factor: float = 3.0,
+        weights=None,
+    ) -> Tuple[List[str], Dict[str, str]]:
+        """Detect tasks slower than ``factor`` × their component median and
+        move them to the closest feasible other node (DESIGN.md §5).
+
+        Returns ``(straggler_task_ids, {task_id: new_node_id})``."""
+        if self.state is None:
+            return [], {}
+        mitigator = StragglerMitigator(
+            self.state, factor, weights if weights is not None else self._weights
+        )
+        found = mitigator.find_stragglers(dict(service_times))
+        return found, mitigator.migrate(found)
+
+    def set_weights(self, weights: Optional[Mapping[str, float]]) -> None:
+        """Change the soft-constraint weights future rebalances/migrations
+        use (a live-tuning knob; committed placements are untouched)."""
+        self._weights = dict(weights) if weights is not None else None
+
+    def simulate_all(
+        self, warm_start: Optional[Mapping[str, float]] = None
+    ) -> Dict[str, Any]:
+        """Joint steady-state simulation of every committed topology (§6.5).
+
+        ``warm_start`` maps topology_id -> previous spout rate λ, letting a
+        scenario replay re-enter the solver near the old fixed point instead
+        of from scratch after each timeline event."""
         from ..stream.simulator import Simulator
 
         if self.state is None or not self.state.topologies:
@@ -272,4 +387,81 @@ class Nimbus:
             (self.state.topologies[tid], self.state.assignments[tid])
             for tid in sorted(self.state.topologies)
         ]
-        return Simulator(self.state.cluster).run_many(pairs)
+        return Simulator(self.state.cluster).run_many(pairs, warm_start=warm_start)
+
+    # -- event-sourced dispatch (the scenario timeline entry point) ----------------
+    def apply(self, event: Any) -> Dict[str, Any]:
+        """Apply one typed scenario event and return its JSON-able outcome.
+
+        This is the single dispatcher ``ScenarioRunner`` replays a timeline
+        through; each event kind maps onto exactly one lifecycle verb, so
+        anything a scenario can do is also a first-class API call.
+        """
+        kind = getattr(event, "kind", None)
+        handler = self._APPLY.get(kind) if isinstance(kind, str) else None
+        if handler is None:
+            raise ScenarioReplayError(
+                f"unknown scenario event {event!r}; known kinds: "
+                f"{sorted(self._APPLY)}"
+            )
+        if self.state is None:
+            raise ScenarioReplayError(
+                "Nimbus.apply needs a live cluster; construct Nimbus(cluster) "
+                "before replaying a timeline"
+            )
+        return handler(self, event)
+
+    def _apply_submit(self, event) -> Dict[str, Any]:
+        payload = SchedulingPayload(
+            topology=event.topology,
+            cluster=self._cluster_spec,
+            scheduler=event.scheduler,
+            settings=event.settings,
+        )
+        plan = self.submit(payload)
+        # Event outcomes are replay-comparable: the same timeline must yield
+        # bit-identical outcomes, so wall-clock timing is scrubbed at the
+        # source (use ``submit`` directly when you need schedule_time_s).
+        return {"plan": dict(plan.to_dict(), schedule_time_s=0.0)}
+
+    def _apply_kill(self, event) -> Dict[str, Any]:
+        assignment = self.kill(event.topology_id)
+        return {
+            "topology_id": event.topology_id,
+            "released_tasks": len(assignment.placements),
+        }
+
+    def _apply_node_fail(self, event) -> Dict[str, Any]:
+        orphans = self.fail_node(event.node_id)
+        return {
+            "node_id": event.node_id,
+            "orphaned": [[topo_id, tid] for topo_id, tid in orphans],
+        }
+
+    def _apply_node_join(self, event) -> Dict[str, Any]:
+        result = self.add_nodes(list(event.nodes))
+        return {"nodes": [n.node_id for n in event.nodes], **result.to_dict()}
+
+    def _apply_rebalance(self, event) -> Dict[str, Any]:
+        return self.rebalance().to_dict()
+
+    def _apply_straggler_report(self, event) -> Dict[str, Any]:
+        found, moves = self.migrate_stragglers(
+            dict(event.service_times), event.factor
+        )
+        return {"stragglers": list(found), "moves": dict(moves)}
+
+    def _apply_weights_change(self, event) -> Dict[str, Any]:
+        self.set_weights(dict(event.weights))
+        return {"weights": dict(event.weights)}
+
+    #: event kind -> handler; kinds match ``repro.api.scenario.EVENT_TYPES``.
+    _APPLY = {
+        "submit": _apply_submit,
+        "kill": _apply_kill,
+        "node_fail": _apply_node_fail,
+        "node_join": _apply_node_join,
+        "rebalance": _apply_rebalance,
+        "straggler_report": _apply_straggler_report,
+        "weights_change": _apply_weights_change,
+    }

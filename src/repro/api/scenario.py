@@ -1,0 +1,621 @@
+"""Event-sourced scenario API: a cluster's lifecycle as a replayable timeline.
+
+The paper's headline claims are *dynamic* — schedules must be reproduced
+"quickly" after failures (§3) and R-Storm's edge widens when topologies share
+a churning cluster (§6.5) — so whole dynamic scenarios become data here, the
+way a single scheduling request became a ``SchedulingPayload``:
+
+* a ``ScenarioSpec`` is a validated, JSON-round-trippable ordered timeline of
+  typed events (submit / kill / node_fail / node_join / rebalance /
+  straggler_report / weights_change) over a declarative ``ClusterSpec``;
+* a ``ScenarioRunner`` replays the timeline through the single
+  ``Nimbus.apply(event)`` dispatcher, re-simulating joint steady state after
+  every step (warm-started from the previous interval's rates);
+* the result is a ``ScenarioTrace``: one entry per timeline step with the
+  event, its outcome (embedded ``SchedulingPlan`` dicts round-trip via
+  ``SchedulingPlan.from_dict``), per-topology throughput/binding/network
+  cost, and cluster occupancy — deterministic, so the same timeline JSON
+  always yields the identical trace dict.
+
+Validation mirrors the payload layer: every problem is reported (not just the
+first) with a path-tagged message, including a static walk of the timeline
+(kill of a never-submitted topology, failing an unknown node, joining a
+duplicate node id, ...) before any replay starts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, ClassVar, Dict, List, Mapping, Optional, Tuple
+
+from ..core.resources import BANDWIDTH, CPU, MEMORY
+from .errors import PayloadValidationError, ScenarioReplayError
+from .nimbus import Nimbus
+from .specs import (
+    ClusterSpec,
+    NodeEntry,
+    RunSettings,
+    SchedulerSpec,
+    TopologySpec,
+    _check_keys,
+    _get,
+    _require_mapping,
+)
+
+_WEIGHT_DIMS = (MEMORY, CPU, BANDWIDTH)
+
+
+# -- typed timeline events -------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitEvent:
+    """Submit one topology against the scenario's live cluster (the cluster
+    spec lives on the ``ScenarioSpec`` — events carry only the delta)."""
+
+    kind: ClassVar[str] = "submit"
+    topology: TopologySpec
+    scheduler: SchedulerSpec
+    settings: RunSettings = dataclasses.field(default_factory=RunSettings)
+
+    _FIELDS = ("kind", "topology", "scheduler", "settings")
+
+    def validate(self, path: str) -> List[str]:
+        errors = self.topology.validate(f"{path}.topology")
+        errors += self.scheduler.validate(f"{path}.scheduler")
+        errors += self.settings.validate(f"{path}.settings")
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "topology": self.topology.to_dict(),
+            "scheduler": self.scheduler.to_dict(),
+            "settings": self.settings.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str, errors: List[str]) -> "SubmitEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        for key in ("topology", "scheduler"):
+            if key not in d:
+                errors.append(f"{path}.{key}: required key missing")
+        return cls(
+            topology=TopologySpec.from_dict(
+                d.get("topology", {}), f"{path}.topology", errors
+            ),
+            scheduler=SchedulerSpec.from_dict(
+                d.get("scheduler", {}), f"{path}.scheduler", errors
+            ),
+            settings=RunSettings.from_dict(
+                d.get("settings", {}), f"{path}.settings", errors
+            ),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class KillEvent:
+    """Remove a submitted topology; its resources return to the cluster."""
+
+    kind: ClassVar[str] = "kill"
+    topology_id: str
+
+    _FIELDS = ("kind", "topology_id")
+
+    def validate(self, path: str) -> List[str]:
+        if not isinstance(self.topology_id, str) or not self.topology_id:
+            return [
+                f"{path}.topology_id: must be a non-empty string, "
+                f"got {self.topology_id!r}"
+            ]
+        return []
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "topology_id": self.topology_id}
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str, errors: List[str]) -> "KillEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(topology_id=_get(d, "topology_id", (str,), path, errors, default=""))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailEvent:
+    """A worker node dies; its tasks become orphans until a rebalance."""
+
+    kind: ClassVar[str] = "node_fail"
+    node_id: str
+
+    _FIELDS = ("kind", "node_id")
+
+    def validate(self, path: str) -> List[str]:
+        if not isinstance(self.node_id, str) or not self.node_id:
+            return [f"{path}.node_id: must be a non-empty string, got {self.node_id!r}"]
+        return []
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "node_id": self.node_id}
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str, errors: List[str]) -> "NodeFailEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(node_id=_get(d, "node_id", (str,), path, errors, default=""))
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeJoinEvent:
+    """Elastic scale-up: fresh nodes join; unassigned tasks are re-placed."""
+
+    kind: ClassVar[str] = "node_join"
+    nodes: Tuple[NodeEntry, ...]
+
+    _FIELDS = ("kind", "nodes")
+
+    def validate(self, path: str) -> List[str]:
+        if not self.nodes:
+            return [f"{path}.nodes: at least one node required"]
+        errors: List[str] = []
+        for i, node in enumerate(self.nodes):
+            errors.extend(node.validate(f"{path}.nodes[{i}]"))
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "nodes": [n.to_dict() for n in self.nodes]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str, errors: List[str]) -> "NodeJoinEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        raw = _get(d, "nodes", (list, tuple), path, errors, default=())
+        return cls(
+            nodes=tuple(
+                NodeEntry.from_dict(n, f"{path}.nodes[{i}]", errors)
+                for i, n in enumerate(raw or ())
+            )
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceEvent:
+    """Re-place orphaned and unassigned tasks on the current cluster."""
+
+    kind: ClassVar[str] = "rebalance"
+
+    _FIELDS = ("kind",)
+
+    def validate(self, path: str) -> List[str]:
+        return []
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind}
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str, errors: List[str]) -> "RebalanceEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls()
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerReportEvent:
+    """Observed per-task service times (the StatisticServer feed as data);
+    tasks slower than ``factor`` × their component median are migrated."""
+
+    kind: ClassVar[str] = "straggler_report"
+    service_times: Mapping[str, float]
+    factor: float = 3.0
+
+    _FIELDS = ("kind", "service_times", "factor")
+
+    def validate(self, path: str) -> List[str]:
+        errors: List[str] = []
+        if not isinstance(self.service_times, Mapping) or not self.service_times:
+            errors.append(
+                f"{path}.service_times: must be a non-empty mapping of "
+                f"task id -> seconds/tuple, got {self.service_times!r}"
+            )
+        else:
+            for tid, s in self.service_times.items():
+                if not isinstance(tid, str) or not tid:
+                    errors.append(
+                        f"{path}.service_times: keys must be task-id strings, "
+                        f"got {tid!r}"
+                    )
+                elif (
+                    isinstance(s, bool)
+                    or not isinstance(s, (int, float))
+                    or s < 0
+                ):
+                    errors.append(
+                        f"{path}.service_times[{tid!r}]: must be a number >= 0, "
+                        f"got {s!r}"
+                    )
+        if (
+            isinstance(self.factor, bool)
+            or not isinstance(self.factor, (int, float))
+            or self.factor <= 0
+        ):
+            errors.append(
+                f"{path}.factor: must be a number > 0, got {self.factor!r}"
+            )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "service_times": dict(self.service_times),
+            "factor": self.factor,
+        }
+
+    @classmethod
+    def from_dict(
+        cls, d: Mapping, path: str, errors: List[str]
+    ) -> "StragglerReportEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        times = _get(d, "service_times", (dict,), path, errors, default={})
+        return cls(
+            service_times=dict(times or {}),
+            factor=_get(d, "factor", (float,), path, errors, default=3.0),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightsChangeEvent:
+    """Re-tune the soft-constraint weights used by later rebalances and
+    straggler migrations (Alg 4's user weights as a live knob)."""
+
+    kind: ClassVar[str] = "weights_change"
+    weights: Mapping[str, float]
+
+    _FIELDS = ("kind", "weights")
+
+    def validate(self, path: str) -> List[str]:
+        errors: List[str] = []
+        if not isinstance(self.weights, Mapping) or not self.weights:
+            return [
+                f"{path}.weights: must be a non-empty mapping of resource "
+                f"dimension -> weight, got {self.weights!r}"
+            ]
+        for dim, w in self.weights.items():
+            if dim not in _WEIGHT_DIMS:
+                errors.append(
+                    f"{path}.weights: unknown dimension {dim!r}; "
+                    f"allowed: {list(_WEIGHT_DIMS)}"
+                )
+            elif isinstance(w, bool) or not isinstance(w, (int, float)) or w < 0:
+                errors.append(
+                    f"{path}.weights[{dim!r}]: must be a number >= 0, got {w!r}"
+                )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "weights": dict(self.weights)}
+
+    @classmethod
+    def from_dict(
+        cls, d: Mapping, path: str, errors: List[str]
+    ) -> "WeightsChangeEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        weights = _get(d, "weights", (dict,), path, errors, default={})
+        return cls(weights=dict(weights or {}))
+
+
+#: kind -> event class; the same kinds ``Nimbus.apply`` dispatches on.
+EVENT_TYPES = {
+    cls.kind: cls
+    for cls in (
+        SubmitEvent,
+        KillEvent,
+        NodeFailEvent,
+        NodeJoinEvent,
+        RebalanceEvent,
+        StragglerReportEvent,
+        WeightsChangeEvent,
+    )
+}
+
+
+def event_from_dict(d: Any, path: str, errors: List[str]):
+    """Parse one timeline entry, dispatching on its ``kind`` tag.
+
+    Collects problems into ``errors`` (returning None) rather than raising,
+    so one malformed entry doesn't swallow the rest of the report."""
+    if not isinstance(d, Mapping):
+        errors.append(f"{path}: expected a mapping, got {type(d).__name__}")
+        return None
+    kind = d.get("kind")
+    cls = EVENT_TYPES.get(kind) if isinstance(kind, str) else None
+    if cls is None:
+        errors.append(
+            f"{path}.kind: unknown event kind {kind!r}; "
+            f"allowed: {sorted(EVENT_TYPES)}"
+        )
+        return None
+    return cls.from_dict(d, path, errors)
+
+
+# -- the scenario spec -----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A whole dynamic scenario as one validated, self-contained value:
+    the environment (``ClusterSpec``) plus an ordered event timeline."""
+
+    cluster: ClusterSpec
+    timeline: Tuple[Any, ...] = ()
+    name: str = "scenario"
+
+    _FIELDS = ("cluster", "timeline", "name")
+
+    def validate(self) -> "ScenarioSpec":
+        """Raise PayloadValidationError listing *all* problems, or return self.
+
+        Beyond per-event checks this statically walks the timeline, tracking
+        which topologies are live and which nodes exist/are dead, so that a
+        kill of a never-submitted topology or a failure of an unknown node is
+        rejected before any replay starts.
+        """
+        errors: List[str] = []
+        if not isinstance(self.name, str) or not self.name:
+            errors.append(f"name: must be a non-empty string, got {self.name!r}")
+        cluster_errors = self.cluster.validate("cluster")
+        errors.extend(cluster_errors)
+        # Node-existence checks need a materialized node set; only a broken
+        # *cluster* spec disables them (unrelated errors must not).
+        known_nodes: set = set()
+        if not cluster_errors:
+            known_nodes = set(self.cluster.to_cluster().nodes)
+        dead_nodes: set = set()
+        live_topologies: set = set()
+        for i, event in enumerate(self.timeline):
+            path = f"timeline[{i}]"
+            if not hasattr(event, "kind") or event.kind not in EVENT_TYPES:
+                errors.append(
+                    f"{path}: not a scenario event: {event!r}; "
+                    f"allowed kinds: {sorted(EVENT_TYPES)}"
+                )
+                continue
+            errors.extend(event.validate(path))
+            if isinstance(event, SubmitEvent):
+                if event.topology.id in live_topologies:
+                    errors.append(
+                        f"{path}.topology.id: {event.topology.id!r} is already "
+                        "submitted at this point in the timeline; kill it "
+                        "first or choose a different id"
+                    )
+                live_topologies.add(event.topology.id)
+            elif isinstance(event, KillEvent):
+                if event.topology_id not in live_topologies:
+                    errors.append(
+                        f"{path}.topology_id: {event.topology_id!r} is not "
+                        "submitted at this point in the timeline "
+                        f"(live: {sorted(live_topologies)})"
+                    )
+                live_topologies.discard(event.topology_id)
+            elif isinstance(event, NodeFailEvent) and known_nodes:
+                if event.node_id not in known_nodes:
+                    errors.append(
+                        f"{path}.node_id: unknown node {event.node_id!r} at "
+                        "this point in the timeline"
+                    )
+                elif event.node_id in dead_nodes:
+                    errors.append(
+                        f"{path}.node_id: node {event.node_id!r} already "
+                        "failed earlier in the timeline"
+                    )
+                dead_nodes.add(event.node_id)
+            elif isinstance(event, NodeJoinEvent) and known_nodes:
+                for j, node in enumerate(event.nodes):
+                    if node.node_id in known_nodes:
+                        errors.append(
+                            f"{path}.nodes[{j}].node_id: node "
+                            f"{node.node_id!r} already exists at this point "
+                            "in the timeline"
+                        )
+                    known_nodes.add(node.node_id)
+        if errors:
+            raise PayloadValidationError(errors)
+        return self
+
+    # -- lossless dict/JSON round-trip ---------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "cluster": self.cluster.to_dict(),
+            "timeline": [event.to_dict() for event in self.timeline],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Any) -> "ScenarioSpec":
+        """Parse + fully validate a pure-dict scenario; raises
+        PayloadValidationError with every problem found."""
+        d = _require_mapping(d, "scenario")
+        errors: List[str] = []
+        _check_keys(d, "scenario", cls._FIELDS, errors)
+        raw_timeline = _get(d, "timeline", (list, tuple), "scenario", errors, default=())
+        timeline = tuple(
+            event
+            for i, raw in enumerate(raw_timeline or ())
+            if (event := event_from_dict(raw, f"timeline[{i}]", errors)) is not None
+        )
+        if "cluster" not in d:
+            # No cluster to parse against, but the timeline errors collected
+            # above still ship in the same report.
+            errors.append("scenario.cluster: required key missing")
+            raise PayloadValidationError(errors)
+        spec = cls(
+            cluster=ClusterSpec.from_dict(d["cluster"], "cluster", errors),
+            timeline=timeline,
+            name=_get(d, "name", (str,), "scenario", errors, default="scenario"),
+        )
+        if errors:
+            # Best-effort semantic pass so the caller sees structural and
+            # semantic problems in one shot (payload-layer convention).
+            try:
+                spec.validate()
+            except PayloadValidationError as semantic:
+                errors.extend(e for e in semantic.errors if e not in errors)
+            raise PayloadValidationError(errors)
+        return spec.validate()
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# -- the trace -------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ScenarioTraceEntry:
+    """Steady state after one timeline event was applied."""
+
+    step: int
+    event: Dict[str, Any]             # the event's to_dict form
+    outcome: Dict[str, Any]           # what Nimbus.apply returned
+    #: topology_id -> {sink_throughput, spout_rate, binding, latency_s,
+    #:                 machines_used, thrashed_nodes}
+    topologies: Dict[str, Dict[str, Any]]
+    network_cost: Dict[str, float]    # topology_id -> netDist sum
+    unplaced: Dict[str, List[str]]    # topology_id -> currently unassigned
+    machines_used: int                # live nodes hosting >= 1 task
+    alive_nodes: int
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "step": self.step,
+            "event": self.event,
+            "outcome": self.outcome,
+            "topologies": self.topologies,
+            "network_cost": dict(self.network_cost),
+            "unplaced": {t: list(v) for t, v in self.unplaced.items()},
+            "machines_used": self.machines_used,
+            "alive_nodes": self.alive_nodes,
+        }
+
+
+@dataclasses.dataclass
+class ScenarioTrace:
+    """The replay's full record: one entry per timeline step.
+
+    Deterministic — replaying the same ``ScenarioSpec`` (or its JSON) yields
+    the identical ``to_dict()`` — so traces are goldens, diffable across
+    schedulers and commits.  Wall-clock scheduling times inside embedded
+    plans are scrubbed to 0.0 to keep that property.
+    """
+
+    scenario: str
+    entries: List[ScenarioTraceEntry] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario,
+            "entries": [e.to_dict() for e in self.entries],
+        }
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    def throughput(self, topology_id: str) -> List[Optional[float]]:
+        """Per-interval sink throughput of one topology (None before submit
+        / after kill) — the paper's y-axis over scenario time."""
+        return [
+            e.topologies.get(topology_id, {}).get("sink_throughput")
+            for e in self.entries
+        ]
+
+    def final(self) -> Optional[ScenarioTraceEntry]:
+        return self.entries[-1] if self.entries else None
+
+    def final_throughput(self) -> Dict[str, float]:
+        last = self.final()
+        if last is None:
+            return {}
+        return {
+            tid: metrics["sink_throughput"]
+            for tid, metrics in last.topologies.items()
+        }
+
+
+# -- the runner ------------------------------------------------------------------
+
+
+class ScenarioRunner:
+    """Replay a ``ScenarioSpec`` through one ``Nimbus``, re-simulating joint
+    steady state after every event.
+
+    ``warm_start`` (default on) feeds each interval's solved spout rates into
+    the next interval's solver — the incremental re-entry that makes long
+    churn timelines cheap; turn it off to re-solve each interval cold.
+    """
+
+    def __init__(self, spec: ScenarioSpec, warm_start: bool = True):
+        self.spec = spec.validate()
+        self.warm_start = warm_start
+
+    def run(self) -> ScenarioTrace:
+        nimbus = Nimbus(self.spec.cluster)
+        trace = ScenarioTrace(scenario=self.spec.name)
+        rates: Dict[str, float] = {}
+        for step, event in enumerate(self.spec.timeline):
+            try:
+                outcome = nimbus.apply(event)
+            except Exception as e:
+                # Static validation can't catch everything (e.g. a submit
+                # that turns out unschedulable); name the failing step.
+                raise ScenarioReplayError(
+                    f"applying {event.kind!r}: {type(e).__name__}: {e}",
+                    step=step,
+                ) from e
+            sims = nimbus.simulate_all(warm_start=rates if self.warm_start else None)
+            rates = {tid: r.spout_rate for tid, r in sims.items()}
+            trace.entries.append(
+                self._entry(step, event, outcome, nimbus, sims)
+            )
+        return trace
+
+    def _entry(self, step, event, outcome, nimbus: Nimbus, sims) -> ScenarioTraceEntry:
+        state, cluster = nimbus.state, nimbus.cluster
+        topo_metrics: Dict[str, Dict[str, Any]] = {}
+        net_cost: Dict[str, float] = {}
+        unplaced: Dict[str, List[str]] = {}
+        used_nodes: set = set()
+        for tid in sorted(state.topologies):
+            topology = state.topologies[tid]
+            assignment = state.assignments[tid]
+            res = sims.get(tid)
+            if res is not None:
+                topo_metrics[tid] = {
+                    "sink_throughput": res.sink_throughput,
+                    "spout_rate": res.spout_rate,
+                    "binding": res.binding,
+                    "latency_s": res.latency_s,
+                    "machines_used": res.machines_used,
+                    "thrashed_nodes": list(res.thrashed_nodes),
+                }
+            net_cost[tid] = assignment.network_cost(topology, cluster, live_only=True)
+            if assignment.unassigned:
+                unplaced[tid] = sorted(assignment.unassigned)
+            used_nodes.update(
+                nid
+                for nid in assignment.placements.values()
+                if cluster.nodes[nid].alive
+            )
+        return ScenarioTraceEntry(
+            step=step,
+            event=event.to_dict(),
+            outcome=outcome,
+            topologies=topo_metrics,
+            network_cost=net_cost,
+            unplaced=unplaced,
+            machines_used=len(used_nodes),
+            alive_nodes=len(cluster.live_nodes()),
+        )
+
+
+def run_scenario(spec: ScenarioSpec, warm_start: bool = True) -> ScenarioTrace:
+    """One-shot convenience: validate + replay a scenario."""
+    return ScenarioRunner(spec, warm_start=warm_start).run()

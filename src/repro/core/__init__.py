@@ -33,7 +33,7 @@ from .registry import (
     validate_scheduler_kwargs,
 )
 from .multitopology import GlobalState
-from .rescheduler import Rescheduler, StragglerMitigator
+from .rescheduler import RebalanceResult, Rescheduler, StragglerMitigator
 
 __all__ = [
     "BANDWIDTH",
@@ -71,6 +71,7 @@ __all__ = [
     "validate_scheduler_kwargs",
     "get_scheduler",
     "GlobalState",
+    "RebalanceResult",
     "Rescheduler",
     "StragglerMitigator",
 ]

@@ -44,16 +44,22 @@ class Assignment:
         return merged
 
     # -- evaluation helpers ----------------------------------------------------
-    def network_cost(self, topology: Topology, cluster: Cluster) -> float:
+    def network_cost(
+        self, topology: Topology, cluster: Cluster, live_only: bool = False
+    ) -> float:
         """Sum of netDist over all communicating task pairs (lower is better).
 
         This is the quadratic term of QM3DKP that R-Storm's greedy heuristic
-        minimizes implicitly.
+        minimizes implicitly.  With ``live_only``, pairs touching a dead node
+        are excluded — the cost of the traffic actually flowing, matching the
+        simulator's placement-aware rates mid-failure.
         """
         cost = 0.0
         for src, dst in topology.task_edges():
             a, b = self.placements.get(src.id), self.placements.get(dst.id)
             if a is None or b is None:
+                continue
+            if live_only and not (cluster.nodes[a].alive and cluster.nodes[b].alive):
                 continue
             cost += cluster.network_distance(a, b)
         return cost

@@ -59,6 +59,41 @@ class GlobalState:
                 node.unassign(task, topology.demand_of(task))
         return assignment
 
+    def fail_node(self, node_id: str) -> List[Tuple[str, str]]:
+        """Mark a node dead and return the (topology_id, task_id) pairs it
+        was hosting — the rescheduler's input.  Placements are left pointing
+        at the dead node until a rebalance re-places them, mirroring Storm
+        (the assignment in ZooKeeper outlives the worker)."""
+        if node_id not in self.cluster.nodes:
+            raise KeyError(f"unknown node {node_id!r}")
+        if not self.cluster.nodes[node_id].alive:
+            # Rejecting the double-fail keeps orphan reports countable: a
+            # second call would re-report the same still-unrebalanced pairs.
+            raise ValueError(f"node {node_id!r} already failed")
+        self.cluster.fail_node(node_id)
+        return [
+            (topo_id, tid)
+            for topo_id in sorted(self.assignments)
+            for tid, nid in self.assignments[topo_id].placements.items()
+            if nid == node_id
+        ]
+
+    def add_nodes(self, node_specs) -> List[str]:
+        """Elastic scale-up: join fresh nodes to the cluster (atomically —
+        a duplicate id rejects the whole batch).  Returns the new node ids."""
+        from .cluster import Node
+
+        specs = list(node_specs)
+        seen = set(self.cluster.nodes)
+        for spec in specs:
+            if spec.node_id in seen:
+                raise ValueError(f"node {spec.node_id!r} already exists")
+            seen.add(spec.node_id)
+        for spec in specs:
+            self.cluster.nodes[spec.node_id] = Node(spec)
+            self.cluster.racks.setdefault(spec.rack_id, []).append(spec.node_id)
+        return [spec.node_id for spec in specs]
+
     def orphaned_tasks(self) -> List[Tuple[str, str]]:
         """(topology_id, task_id) pairs whose node has died — rescheduler input.
 

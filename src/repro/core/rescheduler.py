@@ -8,8 +8,11 @@ so a reschedule is O(orphans × nodes), not a full re-plan.
 
 from __future__ import annotations
 
+import dataclasses
+import math
+import statistics
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .assignment import Assignment
 from .cluster import Cluster
@@ -18,36 +21,58 @@ from .node_selection import NodeSelector
 from .topology import Task, Topology
 
 
+@dataclasses.dataclass
+class RebalanceResult:
+    """Outcome of one rebalancing pass, per topology.
+
+    ``moved`` — tasks that landed on a (new) live node; ``unplaced`` — tasks
+    the pass could not place without violating a hard constraint (they stay
+    in their assignment's ``unassigned`` list awaiting capacity).  The two
+    are disjoint: a task that ends up unassigned is *not* reported as moved.
+    """
+
+    moved: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+    unplaced: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return bool(self.moved or self.unplaced)
+
+    def moved_count(self) -> int:
+        return sum(len(v) for v in self.moved.values())
+
+    def unplaced_count(self) -> int:
+        return sum(len(v) for v in self.unplaced.values())
+
+    def to_dict(self) -> Dict[str, Dict[str, List[str]]]:
+        return {
+            "moved": {tid: list(v) for tid, v in sorted(self.moved.items())},
+            "unplaced": {tid: list(v) for tid, v in sorted(self.unplaced.items())},
+        }
+
+
 class Rescheduler:
     def __init__(self, state: GlobalState, weights=None):
         self.state = state
         self.weights = weights
 
-    def handle_node_failure(self, node_id: str) -> Dict[str, List[str]]:
-        """Fail ``node_id`` and re-place its tasks.  Returns per-topology lists
-        of task ids that were migrated (or left unassigned if infeasible)."""
-        cluster = self.state.cluster
-        cluster.fail_node(node_id)
+    def handle_node_failure(self, node_id: str) -> RebalanceResult:
+        """Fail ``node_id`` and re-place its tasks.  Tasks that cannot be
+        placed on the survivors are reported in ``result.unplaced``."""
+        self.state.fail_node(node_id)
         return self._replace_orphans()
 
-    def handle_scale_up(self, node_specs) -> Dict[str, List[str]]:
+    def handle_scale_up(self, node_specs) -> RebalanceResult:
         """Elastic scale-up: add nodes, then re-place any unassigned tasks."""
-        from .cluster import Node
-
-        for spec in node_specs:
-            if spec.node_id in self.state.cluster.nodes:
-                raise ValueError(f"node {spec.node_id!r} already exists")
-            self.state.cluster.nodes[spec.node_id] = Node(spec)
-            self.state.cluster.racks.setdefault(spec.rack_id, []).append(spec.node_id)
+        self.state.add_nodes(node_specs)
         return self._replace_orphans(include_unassigned=True)
 
-    def rebalance(self) -> Dict[str, List[str]]:
+    def rebalance(self) -> RebalanceResult:
         """Re-place orphaned *and* unassigned tasks on the current cluster."""
         return self._replace_orphans(include_unassigned=True)
 
-    def _replace_orphans(self, include_unassigned: bool = False) -> Dict[str, List[str]]:
+    def _replace_orphans(self, include_unassigned: bool = False) -> RebalanceResult:
         cluster = self.state.cluster
-        moved: Dict[str, List[str]] = {}
+        result = RebalanceResult()
         orphans_by_topo: Dict[str, List[str]] = {}
         for topo_id, tid in self.state.orphaned_tasks():
             orphans_by_topo.setdefault(topo_id, []).append(tid)
@@ -78,11 +103,12 @@ class Rescheduler:
                     assignment.unassigned.remove(tid)
                 if node is None:
                     assignment.unassigned.append(tid)
+                    result.unplaced.setdefault(topo_id, []).append(tid)
                 else:
                     node.assign(task, d)
                     assignment.placements[tid] = node.id
-                moved.setdefault(topo_id, []).append(tid)
-        return moved
+                    result.moved.setdefault(topo_id, []).append(tid)
+        return result
 
 
 class StragglerMitigator:
@@ -95,18 +121,31 @@ class StragglerMitigator:
         self.factor = factor
         self.weights = weights
 
-    def find_stragglers(self, service_times: Dict[str, float]) -> List[str]:
-        """service_times: task id -> EWMA seconds/tuple."""
-        import statistics
+    def _task_components(self) -> Dict[str, Tuple[str, str]]:
+        """task id -> (topology_id, component_id), resolved through the live
+        Topology objects rather than parsing the id string (task-id formats
+        are a rendering detail, and bare ids collide across topologies)."""
+        out: Dict[str, Tuple[str, str]] = {}
+        for topo in self.state.topologies.values():
+            for task in topo.all_tasks():
+                out[task.id] = (topo.id, task.component_id)
+        return out
 
-        by_component: Dict[str, List[float]] = {}
+    def find_stragglers(self, service_times: Dict[str, float]) -> List[str]:
+        """service_times: task id -> EWMA seconds/tuple.  Ids not belonging
+        to any submitted topology are ignored (nothing to migrate)."""
+        components = self._task_components()
+        by_component: Dict[Tuple[str, str], List[float]] = {}
         for tid, s in service_times.items():
-            comp = tid.split("[")[0]
-            by_component.setdefault(comp, []).append(s)
+            comp = components.get(tid)
+            if comp is not None:
+                by_component.setdefault(comp, []).append(s)
         medians = {c: statistics.median(v) for c, v in by_component.items()}
         out = []
         for tid, s in service_times.items():
-            comp = tid.split("[")[0]
+            comp = components.get(tid)
+            if comp is None:
+                continue
             med = medians[comp]
             if med > 0 and s > self.factor * med:
                 out.append(tid)
@@ -119,6 +158,7 @@ class StragglerMitigator:
         for topo_id, assignment in self.state.assignments.items():
             topology = self.state.topologies[topo_id]
             tasks = {t.id: t for t in topology.all_tasks()}
+            selector = NodeSelector(cluster, self.weights)
             for tid in task_ids:
                 if tid not in assignment.placements or tid not in tasks:
                     continue
@@ -128,11 +168,8 @@ class StragglerMitigator:
                 old_node = cluster.nodes[old_nid]
                 if task in old_node.assigned_tasks:
                     old_node.unassign(task, d)
-                selector = NodeSelector(cluster, self.weights)
                 selector.ref_node = old_nid  # stay close to prior placement
                 best = None
-                import math
-
                 best_d = math.inf
                 for nid in sorted(cluster.nodes):
                     node = cluster.nodes[nid]

@@ -126,6 +126,14 @@ class _TopologyLoad:
     def __init__(self, topology: Topology, assignment: Assignment, cluster: Cluster):
         self.topology = topology
         self.assignment = assignment
+        # Effective placements: a task whose node has died contributes no
+        # load and no flow (mid-scenario, between a node failure and the
+        # rebalance, its tuples simply aren't being processed).
+        self.placements: Dict[str, str] = {
+            tid: nid
+            for tid, nid in assignment.placements.items()
+            if cluster.nodes[nid].alive
+        }
         self.rate_in, self.rate_out = _component_rates(topology)
         self.cpu: Dict[str, float] = {}       # node -> cpu points per unit λ
         self.egress: Dict[str, float] = {}    # node -> NIC bytes/s per unit λ
@@ -155,15 +163,15 @@ class _TopologyLoad:
             grouping = topo.groupings.get((src, dst), "shuffle")
             dst_tasks = [
                 t for t in topo.components[dst].tasks(topo.id)
-                if asg.placements.get(t.id) is not None
+                if self.placements.get(t.id) is not None
             ]
             table: Dict[str, List[str]] = {}
             for ts in topo.components[src].tasks(topo.id):
-                a = asg.placements.get(ts.id)
+                a = self.placements.get(ts.id)
                 if a is None:
                     continue
                 if grouping == "local_or_shuffle":
-                    local = [t for t in dst_tasks if asg.placements[t.id] == a]
+                    local = [t for t in dst_tasks if self.placements[t.id] == a]
                     table[ts.id] = [t.id for t in (local or dst_tasks)]
                 else:
                     table[ts.id] = [t.id for t in dst_tasks]
@@ -174,7 +182,7 @@ class _TopologyLoad:
         for cid in _topo_order(topo):
             comp = topo.components[cid]
             for t in comp.tasks(topo.id):
-                if asg.placements.get(t.id) is None:
+                if self.placements.get(t.id) is None:
                     continue
                 if comp.is_spout:
                     rate = 1.0 / comp.parallelism  # unit λ split across tasks
@@ -195,7 +203,7 @@ class _TopologyLoad:
 
         # Node resource usage + edge flows.
         for task in topo.all_tasks():
-            nid = asg.placements.get(task.id)
+            nid = self.placements.get(task.id)
             if nid is None:
                 continue
             comp = topo.component_of(task)
@@ -206,7 +214,7 @@ class _TopologyLoad:
             csrc = topo.components[src]
             flows = []
             for ts_id, targets in table.items():
-                a = asg.placements[ts_id]
+                a = self.placements[ts_id]
                 comp = topo.components[src]
                 out = self.task_rate.get(ts_id, 0.0) * (
                     1.0 if comp.is_spout else comp.emit_ratio
@@ -215,7 +223,7 @@ class _TopologyLoad:
                     continue
                 share = out / len(targets)
                 for td_id in targets:
-                    b = asg.placements[td_id]
+                    b = self.placements[td_id]
                     flows.append((a, b, share))
                     if a != b:
                         byt = share * csrc.tuple_bytes
@@ -227,7 +235,7 @@ class _TopologyLoad:
             self.edge_flows[(src, dst)] = flows
 
     def nodes_used(self) -> List[str]:
-        return sorted(set(self.assignment.placements.values()))
+        return sorted(set(self.placements.values()))
 
     def pending(self) -> float:
         return sum(
@@ -266,21 +274,32 @@ class Simulator:
         return self.run_many([(topology, assignment)])[topology.id]
 
     def run_many(
-        self, scheduled: Sequence[Tuple[Topology, Assignment]]
+        self,
+        scheduled: Sequence[Tuple[Topology, Assignment]],
+        warm_start: Optional[Mapping[str, float]] = None,
     ) -> Dict[str, SimResult]:
         """Joint simulation of topologies sharing the cluster (paper §6.5).
 
         Gauss–Seidel: each round, re-solve each topology's λ against capacity
         minus every *other* topology's current usage, until convergence.
+
+        ``warm_start`` maps topology_id -> a prior spout rate λ used as the
+        solver's entry point — the incremental re-entry a scenario replay
+        uses after each timeline event, where the new steady state is usually
+        near the previous interval's.  The fixed point reached is the same;
+        only the path to it shortens.
         """
         loads = [_TopologyLoad(t, a, self.cluster) for t, a in scheduled]
         thrashed = self._thrashed_nodes(loads)
-        lam = [0.0 for _ in loads]
+        warm = warm_start or {}
+        lam = [max(float(warm.get(load.topology.id, 0.0)), 0.0) for load in loads]
         for _ in range(40):
             delta = 0.0
             for i, load in enumerate(loads):
                 other = [(loads[j], lam[j]) for j in range(len(loads)) if j != i]
-                new = self._solve_single(load, other, thrashed)
+                new = self._solve_single(
+                    load, other, thrashed, init=lam[i] if lam[i] > 0.0 else None
+                )
                 delta = max(delta, abs(new - lam[i]))
                 lam[i] = new
             if delta < 1e-6 * max(1.0, max(lam)):
@@ -418,7 +437,7 @@ class Simulator:
                 continue
             acc, weight = 0.0, 0.0
             for t in comp.tasks(topo.id):
-                nid = load.assignment.placements.get(t.id)
+                nid = load.placements.get(t.id)
                 if nid is None:
                     continue
                 rate = load.task_rate.get(t.id, 0.0) * lam
@@ -463,7 +482,7 @@ class Simulator:
             comp = topo.components[cid]
             done_c = 0.0
             for t in comp.tasks(topo.id):
-                nid = load.assignment.placements.get(t.id)
+                nid = load.placements.get(t.id)
                 if nid is None:
                     continue
                 if comp.is_spout:
@@ -496,6 +515,7 @@ class Simulator:
         load: _TopologyLoad,
         other: Sequence[Tuple[_TopologyLoad, float]],
         thrashed: Sequence[str],
+        init: Optional[float] = None,
     ) -> float:
         source = load.source_bound()
         bw = self._bandwidth_bound(load, other)
@@ -508,7 +528,13 @@ class Simulator:
         cpu = self._cpu_bound(load, other, thrashed)
         hard = min(source, bw, cpu)
         pending = load.pending()
-        lam = 1.0 if not math.isfinite(hard) else max(hard * 0.25, _EPS)
+        if init is not None and math.isfinite(init) and init > _EPS:
+            # Warm re-entry: start the ack-loop iteration at the caller's
+            # prior fixed point (capped by the current hard bounds).
+            lam = min(init, hard) if math.isfinite(hard) else init
+            lam = max(lam, _EPS)
+        else:
+            lam = 1.0 if not math.isfinite(hard) else max(hard * 0.25, _EPS)
         for _ in range(80):
             lat = self._latency(load, lam, other, thrashed)
             ack = pending / lat if lat > _EPS else math.inf
@@ -541,25 +567,24 @@ class Simulator:
         )
         finite = {k: v for k, v in bounds.items() if math.isfinite(v)}
         binding = min(finite, key=lambda k: finite[k]) if finite else "source"
-        if topo.acked:
-            sink_tp = (
-                sum(
-                    load.rate_in[s.id] if not s.is_spout else load.rate_out[s.id]
-                    for s in topo.sinks()
-                )
-                * lam
+        # Placement-aware sink rate: per-unit-λ processed rates of the sink
+        # *tasks* actually placed on live nodes (task_rate only ever contains
+        # those), so a partially-orphaned topology reports the flow its
+        # surviving tasks carry — and zero once nothing is placed.
+        lossless = (
+            sum(
+                load.task_rate.get(t.id, 0.0)
+                for s in topo.sinks()
+                for t in s.tasks(topo.id)
             )
+            * lam
+        )
+        if topo.acked:
+            sink_tp = lossless
         else:
             sink_tp = self._shedding_sink_rate(load, lam, other, thrashed)
             # Attribution: if shedding lost >10% of the lossless flow, CPU
             # (or thrash) was the binding mechanism.
-            lossless = (
-                sum(
-                    load.rate_in[s.id] if not s.is_spout else load.rate_out[s.id]
-                    for s in topo.sinks()
-                )
-                * lam
-            )
             if sink_tp < 0.9 * lossless:
                 binding = "cpu"
         # CPU utilization across machines hosting ≥1 task of *this* topology

@@ -198,11 +198,38 @@ def test_rebalance_replaces_orphans_after_node_failure():
     nimbus.cluster.fail_node(victim)
     orphans = nimbus.state.orphaned_tasks()
     assert orphans and all(topo == "pageload" for topo, _ in orphans)
-    moved = nimbus.rebalance()
-    assert sorted(moved["pageload"]) == sorted(tid for _, tid in orphans)
+    result = nimbus.rebalance()
+    assert sorted(result.moved["pageload"]) == sorted(tid for _, tid in orphans)
+    assert result.unplaced == {}  # survivors have room: nothing left behind
     assignment = nimbus.state.assignments["pageload"]
     assert victim not in set(assignment.placements.values())
     assert nimbus.state.orphaned_tasks() == []
+
+
+def test_rebalance_separates_moved_from_unplaced():
+    """A task that ends up unassigned must be in unplaced, not moved."""
+    nimbus = Nimbus()
+    plan = nimbus.submit(payload())
+    # Kill every node except two: the survivors cannot hold all ~21 tasks.
+    orphaned = 0
+    for nid in sorted(nimbus.cluster.nodes)[:-2]:
+        orphaned += len(nimbus.fail_node(nid))
+    result = nimbus.rebalance()
+    assert result.unplaced, "2 x 2GB nodes cannot hold pageload"
+    assert result.moved_count() + result.unplaced_count() == orphaned
+    assert not set(result.moved.get("pageload", ())) & set(
+        result.unplaced.get("pageload", ())
+    )
+    assignment = nimbus.state.assignments["pageload"]
+    assert sorted(assignment.unassigned) == sorted(result.unplaced["pageload"])
+    # Scale-up through the lifecycle verb lands the leftovers.
+    from repro.core import NodeSpec
+
+    scale = nimbus.add_nodes(
+        [NodeSpec(f"fresh{i}", "rack_fresh", 100.0, 2048.0) for i in range(6)]
+    )
+    assert sorted(scale.moved["pageload"]) == sorted(result.unplaced["pageload"])
+    assert scale.unplaced == {} and not assignment.unassigned
 
 
 def test_orphaned_tasks_are_topology_qualified_pairs():

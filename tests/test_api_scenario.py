@@ -1,0 +1,311 @@
+"""Event-sourced scenario API tests: ScenarioSpec validation + lossless JSON
+round-trip, the Nimbus.apply lifecycle dispatcher, and the golden replay
+guarantee (same timeline JSON -> bit-identical ScenarioTrace dicts) across
+every registered scheduler."""
+
+import pytest
+
+from repro.api import (
+    ClusterSpec,
+    KillEvent,
+    Nimbus,
+    NodeEntry,
+    NodeFailEvent,
+    NodeJoinEvent,
+    PayloadValidationError,
+    RebalanceEvent,
+    ScenarioReplayError,
+    ScenarioRunner,
+    ScenarioSpec,
+    SchedulerSpec,
+    SchedulingPayload,
+    SchedulingPlan,
+    StragglerReportEvent,
+    SubmitEvent,
+    WeightsChangeEvent,
+    run_scenario,
+    scheduler_names,
+)
+from repro.stream import topologies
+
+#: registry name -> fast kwargs (the golden sweep covers every scheduler).
+ALL_SCHEDULERS = {
+    "round_robin": {"seed": 1},
+    "rstorm": {},
+    "rstorm_plus": {},
+    "rstorm_annealed": {"iters": 200},
+}
+
+
+def acceptance_scenario(sched="rstorm", kwargs=None) -> ScenarioSpec:
+    """The acceptance timeline: submit two topologies -> fail a node ->
+    scale up -> rebalance."""
+    return ScenarioSpec(
+        name=f"acceptance_{sched}",
+        cluster=ClusterSpec(preset="emulab_24"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec(sched, dict(kwargs or {})),
+            ),
+            SubmitEvent(
+                topology=topologies.spec("processing"),
+                scheduler=SchedulerSpec(sched, dict(kwargs or {})),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            NodeJoinEvent(
+                nodes=(
+                    NodeEntry("fresh0", "rack_fresh"),
+                    NodeEntry("fresh1", "rack_fresh"),
+                )
+            ),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def test_registry_matches_golden_sweep():
+    assert sorted(ALL_SCHEDULERS) == scheduler_names()
+
+
+# -- spec validation + round trip -------------------------------------------------
+def test_scenario_spec_json_round_trip():
+    spec = acceptance_scenario()
+    replayed = ScenarioSpec.from_json(spec.to_json(indent=2))
+    assert replayed.to_dict() == spec.to_dict()
+    assert replayed == spec  # frozen dataclasses: structural equality
+
+
+def test_scenario_validation_reports_every_problem():
+    spec = ScenarioSpec(
+        cluster=ClusterSpec(preset="emulab_12"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm"),
+            ),
+            SubmitEvent(  # duplicate live topology id
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstormx"),  # and unknown scheduler
+            ),
+            KillEvent(topology_id="nope"),        # never submitted
+            NodeFailEvent(node_id="r9n9"),        # unknown node
+            NodeJoinEvent(nodes=(NodeEntry("r0n0", "rack0"),)),  # exists
+            WeightsChangeEvent(weights={"watts": 1.0}),  # unknown dimension
+        ),
+    )
+    with pytest.raises(PayloadValidationError) as ei:
+        spec.validate()
+    errors = "\n".join(ei.value.errors)
+    assert "already submitted" in errors
+    assert "unknown scheduler" in errors
+    assert "'nope' is not submitted" in errors
+    assert "unknown node 'r9n9'" in errors
+    assert "'r0n0' already exists" in errors
+    assert "unknown dimension 'watts'" in errors
+
+
+def test_scenario_from_dict_rejects_unknown_kind_and_double_fail():
+    d = acceptance_scenario().to_dict()
+    d["timeline"].append({"kind": "meteor_strike"})
+    d["timeline"].append({"kind": "node_fail", "node_id": "r0n0"})  # again
+    with pytest.raises(PayloadValidationError) as ei:
+        ScenarioSpec.from_dict(d)
+    errors = "\n".join(ei.value.errors)
+    assert "unknown event kind 'meteor_strike'" in errors
+    assert "already failed" in errors
+
+
+def test_scenario_validation_unrelated_error_keeps_node_checks():
+    """A bad scenario name must not disable the node-existence walk."""
+    spec = ScenarioSpec(
+        name="",
+        cluster=ClusterSpec(preset="emulab_12"),
+        timeline=(NodeFailEvent(node_id="bogus"),),
+    )
+    with pytest.raises(PayloadValidationError) as ei:
+        spec.validate()
+    errors = "\n".join(ei.value.errors)
+    assert "name: must be a non-empty string" in errors
+    assert "unknown node 'bogus'" in errors
+
+
+def test_scenario_from_dict_missing_cluster_still_reports_timeline():
+    with pytest.raises(PayloadValidationError) as ei:
+        ScenarioSpec.from_dict({"timeline": [{"kind": "meteor_strike"}]})
+    errors = "\n".join(ei.value.errors)
+    assert "scenario.cluster: required key missing" in errors
+    assert "unknown event kind 'meteor_strike'" in errors
+
+
+def test_scenario_from_dict_aggregates_across_malformed_entries():
+    """One non-mapping timeline entry must not swallow the other problems."""
+    with pytest.raises(PayloadValidationError) as ei:
+        ScenarioSpec.from_dict(
+            {
+                "cluster": {"preset": "bogus"},
+                "timeline": [42, {"kind": "meteor_strike"}],
+            }
+        )
+    errors = "\n".join(ei.value.errors)
+    assert "timeline[0]: expected a mapping" in errors
+    assert "unknown event kind 'meteor_strike'" in errors
+    assert "unknown preset 'bogus'" in errors
+
+
+# -- the apply dispatcher ---------------------------------------------------------
+def test_apply_failure_then_rebalance_path():
+    nimbus = Nimbus(ClusterSpec(preset="emulab_12"))
+    out = nimbus.apply(
+        SubmitEvent(
+            topology=topologies.spec("pageload"), scheduler=SchedulerSpec("rstorm")
+        )
+    )
+    plan = SchedulingPlan.from_dict(out["plan"])
+    assert plan.committed and plan.to_dict() == out["plan"]
+    victim = sorted(set(plan.placements.values()))[0]
+    out = nimbus.apply(NodeFailEvent(node_id=victim))
+    assert out["orphaned"] and all(t == "pageload" for t, _ in out["orphaned"])
+    orphan_ids = sorted(tid for _, tid in out["orphaned"])
+    # Double-failing the same node must be rejected, not re-report orphans.
+    with pytest.raises(ValueError, match="already failed"):
+        nimbus.fail_node(victim)
+    out = nimbus.apply(RebalanceEvent())
+    assert sorted(out["moved"]["pageload"]) == orphan_ids
+    assert out["unplaced"] == {}
+    assert nimbus.state.orphaned_tasks() == []
+    placements = nimbus.state.assignments["pageload"].placements
+    assert victim not in set(placements.values())
+
+
+def test_apply_scale_up_lands_unplaced_tasks():
+    nimbus = Nimbus(ClusterSpec(racks=1, nodes_per_rack=3))
+    out = nimbus.apply(
+        SubmitEvent(
+            topology=topologies.spec("pageload"), scheduler=SchedulerSpec("rstorm")
+        )
+    )
+    unassigned = out["plan"]["unassigned"]
+    assert unassigned, "3 x 2GB nodes cannot hold pageload"
+    out = nimbus.apply(
+        NodeJoinEvent(
+            nodes=tuple(NodeEntry(f"fresh{i}", "rack_fresh") for i in range(4))
+        )
+    )
+    assert sorted(out["moved"]["pageload"]) == sorted(unassigned)
+    assert out["unplaced"] == {}
+    assert nimbus.state.assignments["pageload"].is_complete(
+        nimbus.state.topologies["pageload"]
+    )
+    # The joined nodes are part of the live cluster spec now: a follow-up
+    # submit against the *current* cluster is accepted.
+    assert "fresh0" in nimbus.cluster.nodes
+
+
+def test_apply_straggler_and_weights_events():
+    nimbus = Nimbus(ClusterSpec(preset="emulab_12"))
+    out = nimbus.apply(
+        SubmitEvent(
+            topology=topologies.spec("pageload"), scheduler=SchedulerSpec("rstorm")
+        )
+    )
+    placements = dict(nimbus.state.assignments["pageload"].placements)
+    times = {tid: 0.002 for tid in placements}
+    slow = sorted(placements)[0]
+    times[slow] = 1.0
+    nimbus.apply(WeightsChangeEvent(weights={"cpu_points": 0.001}))
+    assert nimbus._weights == {"cpu_points": 0.001}
+    out = nimbus.apply(StragglerReportEvent(service_times=times))
+    assert out["stragglers"] == [slow]
+    assert out["moves"][slow] != placements[slow]
+
+
+def test_replay_failure_names_the_timeline_step():
+    """Dynamically-failing events (static validation can't see them) must
+    surface with their step index."""
+    from repro.api import RunSettings
+
+    spec = ScenarioSpec(
+        cluster=ClusterSpec(racks=1, nodes_per_rack=2),
+        timeline=(
+            SubmitEvent(  # 2 x 2GB nodes cannot hold pageload whole
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm"),
+                settings=RunSettings(allow_partial=False),
+            ),
+        ),
+    )
+    with pytest.raises(ScenarioReplayError, match=r"timeline\[0\].*submit"):
+        run_scenario(spec)
+
+
+def test_apply_rejects_unknown_event_and_empty_nimbus():
+    class Weird:
+        kind = "meteor_strike"
+
+    with pytest.raises(ScenarioReplayError, match="unknown scenario event"):
+        Nimbus(ClusterSpec(preset="emulab_12")).apply(Weird())
+    with pytest.raises(ScenarioReplayError, match="needs a live cluster"):
+        Nimbus().apply(RebalanceEvent())
+
+
+# -- golden replay ----------------------------------------------------------------
+@pytest.mark.parametrize("sched", sorted(ALL_SCHEDULERS))
+def test_golden_replay_is_deterministic(sched):
+    """Acceptance: the same timeline JSON replays to bit-identical traces,
+    for every registered scheduler."""
+    raw = acceptance_scenario(sched, ALL_SCHEDULERS[sched]).to_json()
+    t1 = ScenarioRunner(ScenarioSpec.from_json(raw)).run()
+    t2 = run_scenario(ScenarioSpec.from_json(raw))
+    assert t1.to_dict() == t2.to_dict()
+    assert t1.to_json() == t2.to_json()
+    # The trace records every step and both topologies' steady state.
+    assert [e.event["kind"] for e in t1.entries] == [
+        "submit", "submit", "node_fail", "node_join", "rebalance",
+    ]
+    final = t1.final()
+    assert set(final.topologies) == {"pageload", "processing"}
+    assert final.unplaced == {}
+    assert final.alive_nodes == 25  # 24 - 1 failed + 2 joined
+    # Embedded plans round-trip losslessly through SchedulingPlan.from_dict.
+    for entry in t1.entries[:2]:
+        plan_d = entry.outcome["plan"]
+        assert SchedulingPlan.from_dict(plan_d).to_dict() == plan_d
+    # The throughput series is one point per timeline step.
+    assert len(t1.throughput("pageload")) == len(t1.entries)
+
+
+def test_warm_start_replay_matches_cold_replay_shape():
+    """Warm-started re-entry changes the solver's path, not the story: both
+    reach a steady state with the same bindings and placements."""
+    spec = acceptance_scenario()
+    warm = ScenarioRunner(spec, warm_start=True).run()
+    cold = ScenarioRunner(spec, warm_start=False).run()
+    for ew, ec in zip(warm.entries, cold.entries):
+        assert ew.outcome == ec.outcome
+        assert set(ew.topologies) == set(ec.topologies)
+        for tid in ew.topologies:
+            tw, tc = ew.topologies[tid], ec.topologies[tid]
+            assert tw["machines_used"] == tc["machines_used"]
+            assert tw["sink_throughput"] == pytest.approx(
+                tc["sink_throughput"], rel=1e-3
+            )
+
+
+# -- plan round trip --------------------------------------------------------------
+def test_scheduling_plan_round_trips_with_sim():
+    payload = SchedulingPayload.from_dict(
+        {
+            "topology": topologies.spec("pageload").to_dict(),
+            "cluster": {"preset": "emulab_12"},
+            "scheduler": {"name": "rstorm", "kwargs": {}},
+            "settings": {"allow_partial": True, "simulate": True},
+        }
+    )
+    plan = Nimbus().plan(payload)
+    d = plan.to_dict()
+    rebuilt = SchedulingPlan.from_dict(d)
+    assert rebuilt.to_dict() == d
+    assert rebuilt.sim.sink_throughput == plan.sim.sink_throughput
+    assert rebuilt.machines_used == plan.machines_used
+    assert rebuilt.assignment is None and rebuilt.topology is None
