@@ -1,0 +1,123 @@
+"""Batched placement search vs greedy R-Storm on the flagship overhead case
+(1000 tasks / 256 nodes — the same topology/cluster the scheduler-overhead
+budget gate enforces).
+
+Three views:
+
+* ``search/eval_bXXXX``   — raw batched-evaluator throughput: candidates/s
+  for scoring B complete placements (feasibility + network cost) in one
+  vmapped/jit reduction (numpy fallback when jax is absent);
+* ``search/anneal_*``     — the chains×steps sweep: network-cost improvement
+  over greedy and wall-clock for the full ``rstorm-search`` schedule call;
+* ``search/sequential_*`` — the sequential ``SwapAnnealer`` at a comparable
+  swap budget, pinning what batching buys over one-chain annealing.
+
+Smoke mode (CI) runs one tiny 8-chain × 50-step budget plus a B=1024
+evaluator scaling row.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Assignment, BatchArena, Cluster, PlacementArena, get_scheduler
+from repro.core.search import resolve_backend
+from repro.core.search.objective import evaluate_batch
+
+from .bench_scheduler_overhead import chain_topology
+from .common import emit_csv_row, timed
+
+#: (n_chains, steps) sweep for the full run: breadth scaling at fixed depth
+#: (64→1024 chains), then depth scaling at fixed breadth (200→20000 steps) —
+#: on big topologies depth closes the gap to the sequential annealer while
+#: breadth buys start diversity and the never-worse guarantee.
+SWEEP = ((64, 200), (1024, 200), (64, 5000), (64, 20000))
+SMOKE_SWEEP = ((8, 50),)
+
+#: Evaluator-scaling batch sizes (acceptance: ≥1024 concurrent candidates).
+EVAL_BATCHES = (256, 1024)
+
+
+def flagship():
+    topo = chain_topology(25, 40)
+    cluster = Cluster.homogeneous(
+        racks=8, nodes_per_rack=32, memory_mb=65536.0, cpu=6400.0
+    )
+    return topo, cluster
+
+
+def run(smoke: bool = False) -> list:
+    topo, cluster = flagship()
+    backend = resolve_backend("auto")
+    tasks, nodes = topo.task_count(), len(cluster.nodes)
+    rows = []
+
+    greedy, greedy_s = timed(
+        lambda: get_scheduler("rstorm").schedule(topo, cluster, commit=False),
+        repeat=1 if smoke else 2,
+    )
+    greedy_net = greedy.network_cost(topo, cluster)
+    emit_csv_row(
+        f"search/greedy_t{tasks}_n{nodes}",
+        greedy_s * 1e6,
+        f"netcost={greedy_net};backend={backend}",
+    )
+
+    # Raw batched-evaluator throughput on seeded random candidates.
+    arena = PlacementArena(cluster, topo)
+    avail0 = arena.snapshot()
+    seed_assignment = Assignment(topology_id=topo.id)
+    get_scheduler("rstorm")._place_on_arena(arena, topo, seed_assignment)
+    ba = BatchArena.from_arena(
+        arena, topo, dict(seed_assignment.placements), avail0=avail0
+    )
+    rng = np.random.Generator(np.random.Philox(0))
+    alive = np.flatnonzero(ba.alive)
+    for b in EVAL_BATCHES:
+        P = alive[rng.integers(0, alive.size, size=(b, ba.n_tasks))]
+        result, secs = timed(
+            lambda: evaluate_batch(ba, P, backend=backend), repeat=1 if smoke else 2
+        )
+        emit_csv_row(
+            f"search/eval_b{b}_t{tasks}",
+            secs * 1e6,
+            f"cand_per_s={b / max(secs, 1e-9):.0f};backend={backend};"
+            f"feasible={int(result.feasible.sum())}",
+        )
+        rows.append(("eval", b, secs))
+
+    # chains × steps sweep of the full scheduler call.
+    for n_chains, steps in SMOKE_SWEEP if smoke else SWEEP:
+        sched = get_scheduler(
+            "rstorm-search", n_chains=n_chains, steps=steps, seed=0
+        )
+        cluster.reset()
+        a, secs = timed(
+            lambda: sched.schedule(topo, cluster, commit=False), repeat=1
+        )
+        net = a.network_cost(topo, cluster)
+        emit_csv_row(
+            f"search/anneal_c{n_chains}_s{steps}_t{tasks}",
+            secs * 1e6,
+            f"netcost={net};improvement_pct={100.0 * (greedy_net - net) / greedy_net:.2f};"
+            f"backend={backend};complete={a.is_complete(topo)}",
+        )
+        rows.append(("anneal", n_chains, steps, net, secs))
+
+    # Sequential one-chain annealer at a comparable swap budget.
+    seq_iters = 400 if smoke else 50_000
+    seq = get_scheduler("rstorm_annealed", iters=seq_iters)
+    cluster.reset()
+    a, secs = timed(lambda: seq.schedule(topo, cluster, commit=False), repeat=1)
+    net = a.network_cost(topo, cluster)
+    emit_csv_row(
+        f"search/sequential_i{seq_iters}_t{tasks}",
+        secs * 1e6,
+        f"netcost={net};improvement_pct={100.0 * (greedy_net - net) / greedy_net:.2f}",
+    )
+    rows.append(("sequential", seq_iters, net, secs))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -71,6 +71,13 @@ def compare_schedulers(
     return out
 
 
+#: Machine-readable sink for every emitted row: ``benchmarks.run`` resets
+#: this, stamps ``bench`` per module, and writes it out as BENCH_*.json so
+#: the perf trajectory is tracked across PRs (CI uploads the artifact).
+ROWS: List[Dict[str, object]] = []
+CURRENT_BENCH: str = ""
+
+
 def timed(fn: Callable, *args, repeat: int = 3, **kwargs) -> Tuple[object, float]:
     """Run fn; return (result, best wall-time seconds)."""
     best = float("inf")
@@ -84,3 +91,11 @@ def timed(fn: Callable, *args, repeat: int = 3, **kwargs) -> Tuple[object, float
 
 def emit_csv_row(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
+    ROWS.append(
+        {
+            "bench": CURRENT_BENCH,
+            "name": name,
+            "us_per_call": round(float(us_per_call), 2),
+            "derived": derived,
+        }
+    )

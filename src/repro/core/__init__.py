@@ -35,6 +35,15 @@ from .registry import (
 from .multitopology import GlobalState
 from .rescheduler import RebalanceResult, Rescheduler, StragglerMitigator
 
+# The batched placement-search subsystem; importing registers the
+# "rstorm-search" scheduler alongside the greedy/annealed ones.
+from .search import (
+    BatchAnnealer,
+    BatchArena,
+    SearchScheduler,
+    evaluate_batch,
+)
+
 __all__ = [
     "BANDWIDTH",
     "CPU",
@@ -56,6 +65,10 @@ __all__ = [
     "ArenaSelector",
     "PlacementArena",
     "SwapAnnealer",
+    "BatchAnnealer",
+    "BatchArena",
+    "SearchScheduler",
+    "evaluate_batch",
     "Assignment",
     "Scheduler",
     "RStormScheduler",

@@ -1,8 +1,14 @@
 # Array-backed placement engine: the vectorized scheduling core every
 # registered scheduler runs on (the dict-based NodeSelector path remains
 # available as the reference implementation via ``engine="legacy"``).
-from .arena import PlacementArena
+from .arena import PlacementArena, swap_network_delta, swap_overload_delta
 from .selection import ArenaSelector
 from .annealing import SwapAnnealer
 
-__all__ = ["ArenaSelector", "PlacementArena", "SwapAnnealer"]
+__all__ = [
+    "ArenaSelector",
+    "PlacementArena",
+    "SwapAnnealer",
+    "swap_network_delta",
+    "swap_overload_delta",
+]

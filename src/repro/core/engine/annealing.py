@@ -20,7 +20,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from .arena import PlacementArena
+from .arena import PlacementArena, swap_network_delta, swap_overload_delta
 from ..topology import Topology
 
 #: Same soft-overload penalty weight as the legacy annealer cost.
@@ -101,30 +101,18 @@ class SwapAnnealer:
                 na, nb = self.p[ia], self.p[ib]
                 if na == nb:
                     continue
-                # O(degree) network delta for swapping nodes of a and b.
+                # O(degree) network delta for swapping nodes of a and b
+                # (shared with the batched search engine).
                 pa, pb = self.p[self.adj[ia]], self.p[self.adj[ib]]
-                delta = (
-                    net[nb, pa].sum()
-                    - net[na, pa].sum()
-                    + net[na, pb].sum()
-                    - net[nb, pb].sum()
-                )
-                # a–b edges were double-counted above but truly contribute 0
-                # (net is symmetric); remove the spurious terms.
                 m_ab = int((self.adj[ia] == ib).sum())
-                if m_ab:
-                    delta -= m_ab * (net[na, na] + net[nb, nb] - 2.0 * net[na, nb])
+                delta = swap_network_delta(net, na, nb, pa, pb, m_ab)
                 # O(2) memory-overload delta.
                 ma, mb = self.mem[ia], self.mem[ib]
                 ua, ub = self.used_mem[na], self.used_mem[nb]
                 ua2, ub2 = ua - ma + mb, ub - mb + ma
-                d_over = (
-                    max(0.0, ua2 - self.cap_mem[na])
-                    - max(0.0, ua - self.cap_mem[na])
-                    + max(0.0, ub2 - self.cap_mem[nb])
-                    - max(0.0, ub - self.cap_mem[nb])
+                delta += OVERLOAD_PENALTY * swap_overload_delta(
+                    self.cap_mem[na], self.cap_mem[nb], ua, ub, ma, mb
                 )
-                delta += OVERLOAD_PENALTY * d_over
                 new = cur + delta
                 if new <= cur:
                     self.p[ia], self.p[ib] = nb, na

@@ -40,6 +40,50 @@ from ..topology import Topology
 SELECT_EPS = 1e-12
 
 
+def swap_network_delta(net, na, nb, pa, pb, m_ab=0, mask_a=None, mask_b=None, xp=np):
+    """O(degree) network-cost delta for swapping the nodes of two tasks.
+
+    The one incremental-delta implementation shared by the sequential
+    ``SwapAnnealer`` (scalars: ``na``/``nb`` node indices, ``pa``/``pb`` the
+    neighbours' node indices as ``(deg,)`` rows) and the batched search
+    engine (``(B,)`` node indices, ``(B, max_deg)`` padded neighbour rows
+    with ``mask_*`` flagging real entries, ``xp=jax.numpy`` inside jit).
+
+    ``m_ab`` counts direct a-b edges: those terms cancel exactly in the true
+    cost (``net`` is symmetric) but are double-counted by the two neighbour
+    sums, so their spurious contribution is subtracted.
+    """
+    na_r = xp.asarray(na)[..., None]
+    nb_r = xp.asarray(nb)[..., None]
+    da = net[nb_r, pa] - net[na_r, pa]
+    db = net[na_r, pb] - net[nb_r, pb]
+    if mask_a is not None:
+        da = xp.where(mask_a, da, 0.0)
+    if mask_b is not None:
+        db = xp.where(mask_b, db, 0.0)
+    corr = net[na, na] + net[nb, nb] - 2.0 * net[na, nb]
+    return da.sum(axis=-1) + db.sum(axis=-1) - m_ab * corr
+
+
+def swap_overload_delta(cap_a, cap_b, used_a, used_b, dem_i, dem_j, xp=np):
+    """Hard-dimension overload delta for the same swap, O(dims).
+
+    Works on scalars (the annealer's single memory dimension) or on
+    ``(B, Dh)`` per-chain rows (the batched search), summing the per-dim
+    relu terms over the trailing axis.
+    """
+    ua2 = used_a - dem_i + dem_j
+    ub2 = used_b - dem_j + dem_i
+    d = (
+        xp.maximum(0.0, ua2 - cap_a)
+        - xp.maximum(0.0, used_a - cap_a)
+        + xp.maximum(0.0, ub2 - cap_b)
+        - xp.maximum(0.0, used_b - cap_b)
+    )
+    d = xp.asarray(d)
+    return d.sum(axis=-1) if d.ndim else d
+
+
 class PlacementArena:
     """Dense-array view of a cluster (plus optional topology demand dims)."""
 

@@ -126,9 +126,15 @@ class RStormScheduler(Scheduler):
             assignment.placements[task.id] = node.id
 
     def _place_on_arena(
-        self, arena: PlacementArena, topology: Topology, assignment: Assignment
+        self,
+        arena: PlacementArena,
+        topology: Topology,
+        assignment: Assignment,
+        order=None,
     ) -> None:
-        """The one placement loop both R-Storm and R-Storm+ run on the arena."""
+        """The one placement loop both R-Storm and R-Storm+ run on the arena
+        (and that the search subsystem re-runs under randomized task orders
+        via ``order``; default is Alg 3's task selection)."""
         selector = ArenaSelector(arena)
         rows: Dict[str, tuple] = {}
         hosts: Dict[str, np.ndarray] = {}
@@ -137,7 +143,7 @@ class RStormScheduler(Scheduler):
             if self._upstream_credit
             else {}
         )
-        for task in task_selection(topology):
+        for task in task_selection(topology) if order is None else order:
             cid = task.component_id
             if cid not in rows:
                 rows[cid] = arena.compile_demand(

@@ -1,0 +1,17 @@
+# Batched placement-search subsystem: lifts the PlacementArena's dense
+# arrays into a BatchArena and evaluates thousands of candidate placements
+# in parallel (jax-vmapped when available, numpy fallback otherwise).
+from .backend import HAS_JAX, resolve_backend
+from .batch import BatchArena
+from .objective import evaluate_batch
+from .anneal import BatchAnnealer
+from .portfolio import SearchScheduler
+
+__all__ = [
+    "BatchAnnealer",
+    "BatchArena",
+    "HAS_JAX",
+    "SearchScheduler",
+    "evaluate_batch",
+    "resolve_backend",
+]

@@ -1,0 +1,167 @@
+"""Batched multi-start annealing over candidate placements.
+
+B independent chains run pairwise-swap local search *simultaneously*: each
+step proposes one swap per chain, scores it with the same O(degree)
+incremental delta the sequential ``SwapAnnealer`` uses
+(:func:`repro.core.engine.arena.swap_network_delta`), and accepts it under a
+threshold-accepting schedule (Dueck & Scheuer's deterministic cousin of
+simulated annealing): a swap is accepted iff
+
+    Δ(net + penalty × hard-violation)  ≤  threshold(step)
+
+with the threshold annealing linearly to 0, where the loop becomes pure
+hill-climbing.  Threshold accepting was chosen over Metropolis acceptance
+deliberately — no ``exp``/``log`` in the hot loop means the accept decision
+is a comparison of *exact* float64 quantities, so the jax scan and the
+numpy fallback produce bit-identical chains.
+
+All randomness (swap proposals) is pregenerated with numpy's Philox
+generator from one seed and fed to both backends as data, so a fixed seed
+gives a deterministic result regardless of backend or chain count ordering.
+
+Because violations are penalized at ``OVERLOAD_PENALTY`` (≫ any threshold),
+chains seeded with feasible placements stay feasible at every step, while
+infeasible seeds (random init) are driven toward feasibility first.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+from ..engine.arena import swap_network_delta, swap_overload_delta
+from .backend import jax_modules, resolve_backend, x64
+from .batch import BatchArena
+from .objective import OVERLOAD_PENALTY
+
+#: Initial accept threshold, in net-distance hops: early steps may accept
+#: swaps that worsen the placement by up to this much, escaping the greedy
+#: seed's local minimum; anneals linearly to 0.
+DEFAULT_T0 = 2.0
+
+
+def swap_proposals(
+    n_tasks: int, steps: int, n_chains: int, seed: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pregenerated (i, j) task-index proposals, shape (steps, B) each.
+
+    ``j = (i + offset) % T`` with offset ≥ 1 guarantees i ≠ j.  Philox is
+    counter-based, so the stream is stable across numpy versions/platforms.
+    """
+    rng = np.random.Generator(np.random.Philox(seed))
+    ii = rng.integers(0, n_tasks, size=(steps, n_chains), dtype=np.int64)
+    off = rng.integers(1, max(n_tasks, 2), size=(steps, n_chains), dtype=np.int64)
+    return ii, (ii + off) % n_tasks
+
+
+class BatchAnnealer:
+    """Run B swap-search chains in lockstep on one BatchArena."""
+
+    def __init__(self, ba: BatchArena, backend: str = "auto"):
+        self.ba = ba
+        self.backend = resolve_backend(backend)
+
+    def run(
+        self, P0: np.ndarray, steps: int, seed: int, t0: float = DEFAULT_T0
+    ) -> np.ndarray:
+        """Anneal every chain of ``P0`` (B, T) for ``steps`` proposals each;
+        returns the final (B, T) batch (numpy, regardless of backend)."""
+        P0 = np.ascontiguousarray(np.atleast_2d(P0))
+        n_chains, n_tasks = P0.shape
+        if n_tasks != self.ba.n_tasks:
+            raise ValueError(
+                f"init batch has {n_tasks} tasks, arena has {self.ba.n_tasks}"
+            )
+        if n_tasks < 2 or (self.ba.edges.size == 0 and self.ba.avail.size == 0):
+            return P0.copy()  # nothing a swap could improve
+        ii, jj = swap_proposals(n_tasks, steps, n_chains, seed)
+        thresh = np.linspace(float(t0), 0.0, steps)
+        used0 = self.ba.used(P0)
+        if self.backend == "jax":
+            return self._run_jax(P0, used0, ii, jj, thresh)
+        return self._run_numpy(P0, used0, ii, jj, thresh)
+
+    # -- numpy fallback --------------------------------------------------------
+    def _run_numpy(self, P0, used0, ii, jj, thresh) -> np.ndarray:
+        ba = self.ba
+        P = P0.astype(np.intp, copy=True)
+        used = used0.copy()
+        bidx = np.arange(P.shape[0])
+        for s in range(ii.shape[0]):
+            i, j = ii[s], jj[s]
+            na, nb = P[bidx, i], P[bidx, j]
+            ai, mi = ba.adj[i], ba.adj_mask[i]
+            aj, mj = ba.adj[j], ba.adj_mask[j]
+            pa = P[bidx[:, None], np.where(mi, ai, 0)]
+            pb = P[bidx[:, None], np.where(mj, aj, 0)]
+            m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
+            delta = swap_network_delta(ba.net, na, nb, pa, pb, m_ab, mi, mj)
+            di, dj = ba.hard_demand[i], ba.hard_demand[j]
+            delta = delta + OVERLOAD_PENALTY * swap_overload_delta(
+                ba.avail[na], ba.avail[nb], used[bidx, na], used[bidx, nb], di, dj
+            )
+            accept = (na != nb) & (delta <= thresh[s])
+            P[bidx, i] = np.where(accept, nb, na)
+            P[bidx, j] = np.where(accept, na, nb)
+            du = np.where(accept[:, None], dj - di, 0.0)
+            np.add.at(used, (bidx, na), du)
+            np.add.at(used, (bidx, nb), -du)
+        return P
+
+    # -- jax scan --------------------------------------------------------------
+    def _run_jax(self, P0, used0, ii, jj, thresh) -> np.ndarray:
+        with x64():
+            P = _jax_anneal_fn()(
+                self.ba.net,
+                self.ba.avail,
+                self.ba.hard_demand,
+                self.ba.adj,
+                self.ba.adj_mask,
+                P0.astype(np.int32),
+                used0,
+                ii.astype(np.int32),
+                jj.astype(np.int32),
+                thresh,
+            )
+        return np.asarray(P).astype(np.intp)
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_anneal_fn():
+    """jit-compiled lax.scan over the pregenerated proposal rows — the same
+    per-step math as ``BatchAnnealer._run_numpy``, with scatter updates.
+    One cached callable serves every arena/batch size (jit re-specializes
+    on array shapes)."""
+    jax, jnp = jax_modules()
+
+    @jax.jit
+    def anneal(net, avail, hard_demand, adj, adj_mask, P0, used0, ii, jj, thresh):
+        bidx = jnp.arange(P0.shape[0])
+
+        def step(carry, xs):
+            P, used = carry
+            i, j, th = xs
+            na, nb = P[bidx, i], P[bidx, j]
+            ai, mi = adj[i], adj_mask[i]
+            aj, mj = adj[j], adj_mask[j]
+            pa = P[bidx[:, None], jnp.where(mi, ai, 0)]
+            pb = P[bidx[:, None], jnp.where(mj, aj, 0)]
+            m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
+            delta = swap_network_delta(net, na, nb, pa, pb, m_ab, mi, mj, xp=jnp)
+            di, dj = hard_demand[i], hard_demand[j]
+            delta = delta + OVERLOAD_PENALTY * swap_overload_delta(
+                avail[na], avail[nb], used[bidx, na], used[bidx, nb], di, dj, xp=jnp
+            )
+            accept = (na != nb) & (delta <= th)
+            P = P.at[bidx, i].set(jnp.where(accept, nb, na))
+            P = P.at[bidx, j].set(jnp.where(accept, na, nb))
+            du = jnp.where(accept[:, None], dj - di, 0.0)
+            used = used.at[bidx, na].add(du).at[bidx, nb].add(-du)
+            return (P, used), None
+
+        (P, _), _ = jax.lax.scan(step, (P0, used0), (ii, jj, thresh))
+        return P
+
+    return anneal

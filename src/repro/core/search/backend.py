@@ -1,0 +1,58 @@
+"""Backend gate for the batched search subsystem.
+
+The objective and the annealing loop are written once against the shared
+numpy-style array API and dispatched to either ``jax.numpy`` (vmapped /
+jit-compiled, float64 via the scoped ``enable_x64`` context so results match
+the numpy path bit-for-bit) or plain ``numpy``.  The container may not ship
+jax at all — everything here degrades to the numpy path with identical
+outputs, which the golden-equality tests pin.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import importlib.util
+from typing import Iterator
+
+#: Availability is probed without importing: jax's ~1 s import cost must not
+#: tax every ``import repro.core`` (the search registers eagerly there); the
+#: actual module import is deferred to the first jax-backend call.
+HAS_JAX = importlib.util.find_spec("jax") is not None
+
+BACKENDS = ("auto", "jax", "numpy")
+
+
+def resolve_backend(name: str = "auto") -> str:
+    """Map a requested backend to a concrete one, validating availability."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
+    if name == "auto":
+        return "jax" if HAS_JAX else "numpy"
+    if name == "jax" and not HAS_JAX:
+        raise RuntimeError(
+            "backend='jax' requested but jax is not importable; "
+            "install jax or use backend='numpy'/'auto'"
+        )
+    return name
+
+
+def jax_modules():
+    """(jax, jax.numpy), imported lazily — only call after
+    ``resolve_backend`` said 'jax'."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax, jnp
+
+
+@contextlib.contextmanager
+def x64() -> Iterator[None]:
+    """Scoped float64 for jax traces (global-config safe: the repo's Pallas
+    kernels run float32 and must not see a process-wide x64 flip)."""
+    if not HAS_JAX:  # numpy path — nothing to scope
+        yield
+    else:
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            yield

@@ -1,0 +1,151 @@
+"""BatchArena — the PlacementArena compiled for batched candidate search.
+
+Where the arena answers "which node next for *this* task" (one greedy
+descent), the BatchArena holds everything needed to score *complete*
+placements wholesale: a candidate batch is an int array ``(B, T)`` of node
+indices, and feasibility + network cost for all B candidates is one
+vectorized reduction (:mod:`repro.core.search.objective`).
+
+Compiled once per search from an arena:
+
+* ``net``          — the arena's N×N rack net-distance matrix (shared, not
+  copied);
+* ``avail``        — N×Dh availability on the hard columns *before* this
+  topology's tasks are placed (the capacity budget a candidate must fit);
+* ``hard_demand``  — T×Dh per-task demand on those columns (the
+  hard-constraint column mask applied at compile time);
+* ``alive``        — N bool mask (dead-node hits make a candidate
+  infeasible);
+* ``edges``        — E×2 task-index pairs over the placed tasks (inter-node
+  edge traffic × distance is the objective's cost term);
+* ``adj``/``adj_mask`` — T×max_deg padded adjacency for O(degree)
+  batched swap deltas (same delta implementation as ``SwapAnnealer``).
+
+Task order is ``sorted(placements)`` — the same canonical order the
+sequential annealer uses, so seeds and results translate losslessly between
+the two engines.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..engine.arena import PlacementArena
+from ..topology import Topology
+
+
+@dataclasses.dataclass
+class BatchArena:
+    """Dense batch-evaluation view over one (topology, cluster) pair."""
+
+    node_ids: List[str]
+    tids: List[str]
+    hard_dims: List[str]
+    net: np.ndarray  # (N, N) float64
+    avail: np.ndarray  # (N, Dh) float64, pre-placement hard-column budget
+    hard_demand: np.ndarray  # (T, Dh) float64
+    alive: np.ndarray  # (N,) bool
+    edges: np.ndarray  # (E, 2) intp task-index pairs
+    adj: np.ndarray  # (T, max_deg) intp, -1 padded
+    adj_mask: np.ndarray  # (T, max_deg) bool
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_ids)
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tids)
+
+    @classmethod
+    def from_arena(
+        cls,
+        arena: PlacementArena,
+        topology: Topology,
+        placements: Dict[str, str],
+        avail0: Optional[np.ndarray] = None,
+    ) -> "BatchArena":
+        """Compile the batch view for the tasks in ``placements``.
+
+        ``avail0`` is the arena availability snapshot taken *before* those
+        tasks were assigned (``arena.snapshot()``); defaults to the arena's
+        current ledger for callers compiling against an untouched arena.
+        """
+        tids = sorted(placements)
+        tindex = {tid: i for i, tid in enumerate(tids)}
+        avail_all = arena.avail if avail0 is None else avail0
+
+        # Hard columns: dims any placed task declares hard.  Soft columns
+        # never constrain feasibility (they may legally go negative), so
+        # they are dropped at compile time.
+        demands = {t.id: topology.demand_of(t) for t in topology.all_tasks()}
+        hard_dims = sorted(
+            {dim for tid in tids for dim in demands[tid].hard}
+        )
+        hard_cols = np.array([arena.dim_col[d] for d in hard_dims], dtype=np.intp)
+        hard_demand = np.zeros((len(tids), len(hard_dims)), dtype=np.float64)
+        for tid in tids:
+            rv = demands[tid]
+            for j, dim in enumerate(hard_dims):
+                if dim in rv.hard:
+                    hard_demand[tindex[tid], j] = rv[dim]
+        avail = (
+            avail_all[:, hard_cols].astype(np.float64, copy=True)
+            if hard_cols.size
+            else np.zeros((len(arena.node_ids), 0), dtype=np.float64)
+        )
+
+        # Directed task edges over placed tasks + padded adjacency.
+        adj_lists: List[List[int]] = [[] for _ in tids]
+        edge_pairs: List[List[int]] = []
+        for src, dst in topology.task_edges():
+            a, b = tindex.get(src.id), tindex.get(dst.id)
+            if a is None or b is None:
+                continue
+            edge_pairs.append([a, b])
+            adj_lists[a].append(b)
+            adj_lists[b].append(a)
+        edges = (
+            np.array(edge_pairs, dtype=np.intp)
+            if edge_pairs
+            else np.zeros((0, 2), dtype=np.intp)
+        )
+        max_deg = max((len(x) for x in adj_lists), default=0)
+        adj = np.full((len(tids), max(max_deg, 1)), -1, dtype=np.intp)
+        for i, nbrs in enumerate(adj_lists):
+            adj[i, : len(nbrs)] = nbrs
+        adj_mask = adj >= 0
+
+        return cls(
+            node_ids=list(arena.node_ids),
+            tids=tids,
+            hard_dims=hard_dims,
+            net=arena.net,
+            avail=avail,
+            hard_demand=hard_demand,
+            alive=arena.alive.copy(),
+            edges=edges,
+            adj=adj,
+            adj_mask=adj_mask,
+        )
+
+    # -- placement codecs ------------------------------------------------------
+    def encode(self, placements: Dict[str, str]) -> np.ndarray:
+        """task→node-id dict (over exactly ``self.tids``) → (T,) index row."""
+        index = {nid: i for i, nid in enumerate(self.node_ids)}
+        return np.array([index[placements[tid]] for tid in self.tids], dtype=np.intp)
+
+    def decode(self, row: np.ndarray) -> Dict[str, str]:
+        """(T,) node-index row → task→node-id dict."""
+        return {tid: self.node_ids[int(row[i])] for i, tid in enumerate(self.tids)}
+
+    def used(self, placements: np.ndarray) -> np.ndarray:
+        """Per-node hard-column usage for a batch ``(B, T)`` → ``(B, N, Dh)``."""
+        p = np.atleast_2d(placements)
+        out = np.zeros((p.shape[0], self.n_nodes, len(self.hard_dims)))
+        for b in range(p.shape[0]):
+            np.add.at(out[b], p[b], self.hard_demand)
+        return out

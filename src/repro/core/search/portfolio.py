@@ -1,0 +1,221 @@
+"""``rstorm-search`` — the batched placement-search scheduler.
+
+Wraps the whole subsystem as a registered scheduler: seed candidate chains
+(greedy R-Storm, greedy under randomized task orders, random placements,
+or every registered scheduler's output — the portfolio), anneal all chains
+in one batched run, then return the feasible candidate with the lowest
+network cost.  The greedy R-Storm placement always competes, so the result
+is *never worse than the greedy seed* — on clusters where greedy is already
+optimal the search degrades to exactly R-Storm.
+
+Unplaced tasks are out of scope here exactly as for ``rstorm_annealed``:
+the search permutes the tasks greedy could place (swaps preserve the
+per-node multiset, so hard feasibility of the seed is preserved too), and
+greedy's ``unassigned`` list rides through unchanged.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+from ..assignment import Assignment
+from ..cluster import Cluster
+from ..engine import PlacementArena
+from ..registry import KwargField, REGISTRY, register_scheduler
+from ..schedulers import RStormScheduler, Scheduler
+from ..topology import Topology
+from ..traversal import task_selection
+from .anneal import BatchAnnealer, swap_proposals
+from .backend import BACKENDS, resolve_backend
+from .batch import BatchArena
+from .objective import evaluate_batch
+
+INIT_MODES = ("greedy", "random", "all-registered")
+
+#: Randomized-task-order greedy seeds are sequential (one Alg-4 descent
+#: each), so only this many chains get one; the rest start from seeded
+#: random perturbations of the plain greedy placement.
+MAX_ORDERED_SEEDS = 8
+
+#: Swap-perturbation depth for the non-ordered chains.
+PERTURB_SWAPS = 16
+
+
+def _greedy_with_order(
+    scheduler: RStormScheduler, arena: PlacementArena, topology: Topology, order
+) -> Optional[Dict[str, str]]:
+    """One Alg-4 greedy descent over ``order`` (the scheduler's own arena
+    placement loop, just reordered); task-id → node-id.
+
+    Runs on the arena's current ledger and rolls it back before returning.
+    Returns None when a task greedy could otherwise place fails under this
+    order (the seed would cover a different task set than the batch).
+    """
+    snap = arena.snapshot()
+    a = Assignment(topology_id=topology.id)
+    scheduler._place_on_arena(arena, topology, a, order=order)
+    arena.rollback(snap)
+    return dict(a.placements) if not a.unassigned else None
+
+
+def _perturb(base: np.ndarray, rows: np.ndarray, n_swaps: int, seed: int) -> None:
+    """Apply ``n_swaps`` seeded random transpositions to each row of
+    ``base[rows]`` in place (cheap chain diversification)."""
+    if rows.size == 0 or base.shape[1] < 2:
+        return
+    ii, jj = swap_proposals(base.shape[1], n_swaps, rows.size, seed)
+    for s in range(n_swaps):
+        i, j = ii[s], jj[s]
+        tmp = base[rows, i].copy()
+        base[rows, i] = base[rows, j]
+        base[rows, j] = tmp
+
+
+@register_scheduler(
+    "rstorm-search",
+    kwargs_schema={
+        "n_chains": KwargField(
+            types=(int,), default=32, minimum=1, doc="parallel search chains (B)"
+        ),
+        "steps": KwargField(
+            types=(int,),
+            default=2000,
+            minimum=1,
+            doc="swap proposals per chain (depth moves the needle more than "
+            "breadth on large topologies; breadth buys diversity)",
+        ),
+        "seed": KwargField(types=(int,), default=0, minimum=0, doc="PRNG seed"),
+        "init": KwargField(
+            types=(str,),
+            default="greedy",
+            choices=INIT_MODES,
+            doc="chain seeding: greedy R-Storm (+ randomized task orders), "
+            "uniform-random placements, or every registered scheduler",
+        ),
+        "weights": KwargField(
+            types=(dict, type(None)),
+            default=None,
+            doc="soft-dimension distance weights for the greedy seed (Alg 4)",
+        ),
+        "backend": KwargField(
+            types=(str,),
+            default="auto",
+            choices=BACKENDS,
+            doc="batch evaluator backend: auto picks jax when importable, "
+            "numpy otherwise (outputs are golden-equal)",
+        ),
+    },
+)
+class SearchScheduler(Scheduler):
+    """Multi-start batched annealing over the greedy seed's task set."""
+
+    def __init__(
+        self,
+        n_chains: int = 32,
+        steps: int = 2000,
+        seed: int = 0,
+        init: str = "greedy",
+        weights: Optional[Mapping[str, float]] = None,
+        backend: str = "auto",
+    ):
+        if init not in INIT_MODES:
+            raise ValueError(f"unknown init {init!r}; choose from {INIT_MODES}")
+        self.n_chains = n_chains
+        self.steps = steps
+        self.seed = seed
+        self.init = init
+        self.weights = weights
+        self.backend = resolve_backend(backend)
+
+    def schedule(
+        self, topology: Topology, cluster: Cluster, *, commit: bool = True
+    ) -> Assignment:
+        t0 = time.perf_counter()
+        topology.validate()
+        # Greedy R-Storm seed on a fresh arena; avail0 (the pre-placement
+        # ledger) is the capacity budget candidates are scored against.
+        arena = PlacementArena(cluster, topology, self.weights)
+        avail0 = arena.snapshot()
+        seed_assignment = Assignment(topology_id=topology.id)
+        greedy_scheduler = RStormScheduler(self.weights)
+        greedy_scheduler._place_on_arena(arena, topology, seed_assignment)
+        placements = dict(seed_assignment.placements)
+        out = Assignment(
+            topology_id=topology.id,
+            placements=placements,
+            unassigned=list(seed_assignment.unassigned),
+        )
+        if len(placements) >= 2:
+            ba = BatchArena.from_arena(arena, topology, placements, avail0=avail0)
+            greedy_row = ba.encode(placements)
+            # Ordered re-seeds descend from the pre-placement budget, not
+            # from the ledger the greedy seed just consumed.
+            arena.rollback(avail0)
+            P0 = self._build_inits(
+                ba, arena, topology, cluster, greedy_row, greedy_scheduler
+            )
+            P = BatchAnnealer(ba, backend=self.backend).run(
+                P0, self.steps, self.seed
+            )
+            result = evaluate_batch(ba, P, backend=self.backend)
+            greedy_net = float(
+                evaluate_batch(ba, greedy_row, backend=self.backend).net[0]
+            )
+            cand = np.where(result.feasible, result.net, np.inf)
+            best = int(np.argmin(cand))  # ties → lowest chain index
+            if np.isfinite(cand[best]) and cand[best] < greedy_net:
+                out.placements = ba.decode(P[best])
+        return self._finish(topology, cluster, out, commit, t0)
+
+    # -- chain seeding ---------------------------------------------------------
+    def _build_inits(
+        self,
+        ba: BatchArena,
+        arena: PlacementArena,
+        topology: Topology,
+        cluster: Cluster,
+        greedy_row: np.ndarray,
+        greedy_scheduler: RStormScheduler,
+    ) -> np.ndarray:
+        B, T = self.n_chains, ba.n_tasks
+        rng = np.random.Generator(np.random.Philox([self.seed, 0xC0FFEE]))
+        P0 = np.tile(greedy_row, (B, 1))
+        if self.init == "random":
+            alive_idx = np.flatnonzero(ba.alive)
+            if alive_idx.size:
+                P0[1:] = alive_idx[rng.integers(0, alive_idx.size, size=(B - 1, T))]
+            # Chain 0 stays the greedy seed so the never-worse guarantee is
+            # decided within the batch, not just by the final comparison.
+            return P0
+        seeds: List[np.ndarray] = [greedy_row]
+        if self.init == "greedy":
+            order = task_selection(topology)
+            for k in range(min(B - 1, MAX_ORDERED_SEEDS)):
+                shuffled = list(order)
+                rng.shuffle(shuffled)
+                sol = _greedy_with_order(greedy_scheduler, arena, topology, shuffled)
+                if sol is not None and set(sol) == set(ba.tids):
+                    seeds.append(ba.encode(sol))
+        else:  # all-registered portfolio
+            for name in sorted(REGISTRY):
+                if name == "rstorm-search":
+                    continue  # never recurse into ourselves
+                try:
+                    a = REGISTRY[name].cls().schedule(topology, cluster, commit=False)
+                except Exception:
+                    continue
+                if set(a.placements) == set(ba.tids):
+                    seeds.append(ba.encode(a.placements))
+        for c in range(B):
+            P0[c] = seeds[c % len(seeds)]
+        # Chains beyond the distinct seeds explore from perturbed copies.
+        _perturb(
+            P0,
+            np.arange(len(seeds), B),
+            PERTURB_SWAPS,
+            self.seed ^ 0x5EED,
+        )
+        return P0

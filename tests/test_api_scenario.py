@@ -32,6 +32,7 @@ from repro.stream import topologies
 ALL_SCHEDULERS = {
     "round_robin": {"seed": 1},
     "rstorm": {},
+    "rstorm-search": {"n_chains": 8, "steps": 60},
     "rstorm_plus": {},
     "rstorm_annealed": {"iters": 200},
 }

@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytest.importorskip("jax")  # the subprocess under test imports jax
+
 SCRIPT = textwrap.dedent(
     """
     import os

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytest.importorskip("jax")  # the subprocess under test imports jax
+
 
 def _run(extra, ckpt):
     return subprocess.run(

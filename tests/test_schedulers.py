@@ -148,6 +148,7 @@ def test_registry_knows_all_builtin_schedulers():
     assert scheduler_names() == [
         "round_robin",
         "rstorm",
+        "rstorm-search",
         "rstorm_annealed",
         "rstorm_plus",
     ]

@@ -1,0 +1,364 @@
+"""Batched placement-search subsystem (repro.core.search).
+
+Covers: BatchArena compilation, the batched objective against the exact
+dict-path evaluators, the shared swap-delta against full recomputation
+(the regression the extraction from SwapAnnealer is pinned by), the
+rstorm-search scheduler's never-worse-than-greedy guarantee, determinism,
+jax/numpy golden equality, and the control-plane integration
+(registry kwargs, Nimbus plan/submit/rebalance, ScenarioRunner replay).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Assignment,
+    BatchArena,
+    Cluster,
+    Component,
+    PlacementArena,
+    SearchScheduler,
+    Topology,
+    emulab_cluster,
+    evaluate_batch,
+    get_scheduler,
+    validate_scheduler_kwargs,
+)
+from repro.core.engine import swap_network_delta, swap_overload_delta
+from repro.core.search import BatchAnnealer, HAS_JAX
+from repro.core.search.anneal import swap_proposals
+from repro.stream import topologies as T
+
+BACKENDS = ["numpy"] + (["jax"] if HAS_JAX else [])
+
+
+def chain_topology(components=5, parallelism=4, mem=128.0, cpu=10.0):
+    t = Topology(f"chain{components}x{parallelism}")
+    prev = None
+    for i in range(components):
+        c = Component(f"c{i}", is_spout=(i == 0), parallelism=parallelism)
+        c.set_memory_load(mem).set_cpu_load(cpu)
+        t.add_component(c)
+        if prev:
+            t.add_edge(prev, c.id)
+        prev = c.id
+    return t
+
+
+def compile_case(topo_factory=chain_topology, cluster_factory=emulab_cluster):
+    topology, cluster = topo_factory(), cluster_factory()
+    arena = PlacementArena(cluster, topology)
+    avail0 = arena.snapshot()
+    assignment = Assignment(topology_id=topology.id)
+    get_scheduler("rstorm")._place_on_arena(arena, topology, assignment)
+    ba = BatchArena.from_arena(
+        arena, topology, dict(assignment.placements), avail0=avail0
+    )
+    return topology, cluster, arena, assignment, ba
+
+
+def random_batch(ba, n, seed=0, alive_only=True):
+    rng = np.random.Generator(np.random.Philox(seed))
+    pool = np.flatnonzero(ba.alive) if alive_only else np.arange(ba.n_nodes)
+    return pool[rng.integers(0, pool.size, size=(n, ba.n_tasks))]
+
+
+# -- BatchArena compilation -------------------------------------------------------
+def test_batch_arena_shapes_and_order():
+    topology, cluster, arena, assignment, ba = compile_case()
+    assert ba.tids == sorted(assignment.placements)
+    assert ba.n_tasks == len(assignment.placements)
+    assert ba.n_nodes == len(cluster.nodes)
+    assert ba.hard_dims == ["memory_mb"]
+    assert ba.net is arena.net  # shared, not copied
+    assert ba.hard_demand.shape == (ba.n_tasks, 1)
+    assert ba.adj.shape[0] == ba.n_tasks
+    assert (ba.adj[ba.adj_mask] >= 0).all()
+    # Every directed component edge appears as task pairs over placed tasks.
+    assert ba.edges.shape[0] == sum(
+        topology.components[s].parallelism * topology.components[d].parallelism
+        for s, d in topology.edges
+    )
+
+
+def test_encode_decode_round_trip():
+    *_, assignment, ba = compile_case()
+    row = ba.encode(dict(assignment.placements))
+    assert ba.decode(row) == dict(assignment.placements)
+
+
+# -- objective vs exact dict-path evaluation --------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_objective_matches_assignment_network_cost(backend):
+    topology, cluster, arena, assignment, ba = compile_case(
+        lambda: T.pageload(), lambda: emulab_cluster()
+    )
+    P = random_batch(ba, 16, seed=7)
+    result = evaluate_batch(ba, P, backend=backend)
+    for b in range(P.shape[0]):
+        a = Assignment(topology.id, placements=ba.decode(P[b]))
+        assert result.net[b] == a.network_cost(topology, cluster)
+        # On a fresh cluster, availability == capacity, so zero violation
+        # must coincide with the dict-path hard_violations check.
+        assert (result.violation[b] == 0.0) == (
+            a.hard_violations(topology, cluster) == []
+        )
+    assert (result.dead == 0).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_objective_flags_dead_nodes(backend):
+    topology, cluster, arena, assignment, ba = compile_case()
+    cluster.fail_node(ba.node_ids[0])
+    arena2 = PlacementArena(cluster, topology)
+    ba2 = BatchArena.from_arena(
+        arena2, topology, dict(assignment.placements), avail0=arena2.snapshot()
+    )
+    P = np.zeros((1, ba2.n_tasks), dtype=np.intp)  # everything on the dead node
+    result = evaluate_batch(ba2, P, backend=backend)
+    assert result.dead[0] == ba2.n_tasks
+    assert not result.feasible[0]
+
+
+def test_greedy_seed_is_feasible_with_zero_violation():
+    topology, cluster, arena, assignment, ba = compile_case()
+    result = evaluate_batch(ba, ba.encode(dict(assignment.placements)))
+    assert result.violation[0] == 0.0
+    assert result.feasible[0]
+
+
+# -- shared swap delta vs full recompute (regression for the extraction) ----------
+def test_swap_delta_matches_full_recompute():
+    topology, cluster, arena, assignment, ba = compile_case(
+        lambda: T.diamond(True), lambda: emulab_cluster()
+    )
+    rng = np.random.Generator(np.random.Philox(3))
+    P = random_batch(ba, 1, seed=11)[0]
+    base = evaluate_batch(ba, P)
+    used = ba.used(P)[0]
+    for _ in range(50):
+        i = int(rng.integers(0, ba.n_tasks))
+        j = int((i + rng.integers(1, ba.n_tasks)) % ba.n_tasks)
+        na, nb = int(P[i]), int(P[j])
+        pa = P[np.where(ba.adj_mask[i], ba.adj[i], 0)]
+        pb = P[np.where(ba.adj_mask[j], ba.adj[j], 0)]
+        m_ab = int(((ba.adj[i] == j) & ba.adj_mask[i]).sum())
+        dnet = swap_network_delta(
+            ba.net, na, nb, pa, pb, m_ab, ba.adj_mask[i], ba.adj_mask[j]
+        )
+        dov = swap_overload_delta(
+            ba.avail[na], ba.avail[nb], used[na], used[nb],
+            ba.hard_demand[i], ba.hard_demand[j],
+        )
+        Q = P.copy()
+        Q[i], Q[j] = P[j], P[i]
+        full = evaluate_batch(ba, Q)
+        assert dnet == full.net[0] - base.net[0]
+        assert dov == pytest.approx(full.violation[0] - base.violation[0])
+
+
+def test_sequential_annealer_tracked_cost_matches_recompute():
+    """The SwapAnnealer, now running on the shared delta, must still land on
+    a placement whose tracked cost equals the from-scratch evaluation."""
+    import random
+    from repro.core import SwapAnnealer
+
+    topology, cluster, arena, assignment, ba = compile_case()
+    ann = SwapAnnealer(arena, topology, dict(assignment.placements))
+    placements = ann.run(300, random.Random(5))
+    a = Assignment(topology.id, placements=placements)
+    assert ann.cost() == a.network_cost(topology, cluster)
+
+
+# -- batched annealer -------------------------------------------------------------
+def test_swap_proposals_never_propose_identity():
+    ii, jj = swap_proposals(17, 200, 8, seed=4)
+    assert (ii != jj).all()
+    ii2, jj2 = swap_proposals(17, 200, 8, seed=4)
+    assert (ii == ii2).all() and (jj == jj2).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_annealer_chains_stay_feasible_from_greedy(backend):
+    topology, cluster, arena, assignment, ba = compile_case()
+    P0 = np.tile(ba.encode(dict(assignment.placements)), (8, 1))
+    P = BatchAnnealer(ba, backend=backend).run(P0, steps=150, seed=2)
+    result = evaluate_batch(ba, P, backend=backend)
+    assert (result.violation == 0.0).all()
+    assert (result.dead == 0).all()
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+def test_annealer_backends_golden_equal():
+    topology, cluster, arena, assignment, ba = compile_case(
+        lambda: T.pageload(), lambda: emulab_cluster()
+    )
+    P0 = random_batch(ba, 16, seed=9)
+    a = BatchAnnealer(ba, backend="numpy").run(P0, steps=200, seed=13)
+    b = BatchAnnealer(ba, backend="jax").run(P0, steps=200, seed=13)
+    assert (a == b).all()
+    ra = evaluate_batch(ba, a, backend="numpy")
+    rb = evaluate_batch(ba, b, backend="jax")
+    assert (ra.net == rb.net).all()
+    assert (ra.violation == rb.violation).all()
+
+
+# -- the registered scheduler -----------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("init", ["greedy", "random", "all-registered"])
+def test_search_never_worse_than_greedy(init, backend):
+    topology, cluster = T.pageload(), emulab_cluster()
+    greedy = get_scheduler("rstorm").schedule(topology, cluster, commit=False)
+    greedy_net = greedy.network_cost(topology, cluster)
+    cluster.reset()
+    s = get_scheduler(
+        "rstorm-search", n_chains=12, steps=120, seed=1, init=init, backend=backend
+    ).schedule(topology, cluster, commit=False)
+    assert s.network_cost(topology, cluster) <= greedy_net
+    assert s.hard_violations(topology, cluster) == []
+    assert sorted(s.unassigned) == sorted(greedy.unassigned)
+    assert set(s.placements) == set(greedy.placements)
+
+
+def test_search_improves_on_flagship_overhead_case():
+    """Acceptance: strictly lower network cost than greedy on the
+    1000-task / 256-node case (small budget keeps the test fast)."""
+    topo = chain_topology(25, 40)
+    cluster = Cluster.homogeneous(
+        racks=8, nodes_per_rack=32, memory_mb=65536.0, cpu=6400.0
+    )
+    greedy = get_scheduler("rstorm").schedule(topo, cluster, commit=False)
+    cluster.reset()
+    s = get_scheduler("rstorm-search", n_chains=16, steps=150, seed=0).schedule(
+        topo, cluster, commit=False
+    )
+    assert s.network_cost(topo, cluster) < greedy.network_cost(topo, cluster)
+    assert s.hard_violations(topo, cluster) == []
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_search_deterministic(backend):
+    topology, cluster = T.diamond(True), emulab_cluster()
+    kw = dict(n_chains=10, steps=100, seed=42, backend=backend)
+    a = get_scheduler("rstorm-search", **kw).schedule(topology, cluster, commit=False)
+    cluster.reset()
+    b = get_scheduler("rstorm-search", **kw).schedule(topology, cluster, commit=False)
+    assert a.placements == b.placements
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+def test_search_backends_agree_end_to_end():
+    topology, cluster = T.pageload(), emulab_cluster()
+    kw = dict(n_chains=12, steps=150, seed=3)
+    a = get_scheduler("rstorm-search", backend="numpy", **kw).schedule(
+        topology, cluster, commit=False
+    )
+    cluster.reset()
+    b = get_scheduler("rstorm-search", backend="jax", **kw).schedule(
+        topology, cluster, commit=False
+    )
+    assert a.placements == b.placements
+
+
+def test_search_degrades_to_greedy_on_trivial_topology():
+    t = Topology("solo")
+    t.add_component(Component("s", is_spout=True, parallelism=1))
+    cluster = emulab_cluster()
+    s = get_scheduler("rstorm-search", n_chains=4, steps=10).schedule(
+        t, cluster, commit=False
+    )
+    cluster.reset()
+    g = get_scheduler("rstorm").schedule(t, cluster, commit=False)
+    assert s.placements == g.placements
+
+
+# -- control-plane integration ----------------------------------------------------
+def test_kwargs_schema_validation():
+    assert validate_scheduler_kwargs("rstorm-search", {"n_chains": 8}) == []
+    errs = validate_scheduler_kwargs(
+        "rstorm-search", {"init": "genetic", "steps": 0, "bogus": 1}
+    )
+    assert len(errs) == 3
+    with pytest.raises(TypeError):
+        get_scheduler("rstorm-search", init="genetic")
+    if HAS_JAX:
+        assert SearchScheduler(backend="jax").backend == "jax"
+    else:
+        # Explicit jax on a jax-less box must fail loudly, not fall back.
+        with pytest.raises(RuntimeError):
+            SearchScheduler(backend="jax")
+    assert SearchScheduler(backend="auto").backend == (
+        "jax" if HAS_JAX else "numpy"
+    )
+
+
+def test_nimbus_plan_submit_rebalance_with_search():
+    from repro.api import (
+        ClusterSpec,
+        Nimbus,
+        RunSettings,
+        SchedulerSpec,
+        SchedulingPayload,
+        TopologySpec,
+    )
+
+    payload = SchedulingPayload(
+        topology=TopologySpec.from_topology(T.pageload()),
+        cluster=ClusterSpec(preset="emulab_12"),
+        scheduler=SchedulerSpec("rstorm-search", {"n_chains": 8, "steps": 80}),
+        settings=RunSettings(simulate=False),
+    )
+    nim = Nimbus()
+    plan = nim.plan(payload)
+    assert plan.scheduler_name == "rstorm-search"
+    assert not plan.committed and nim.cluster is None
+    plan2 = nim.submit(payload)
+    assert plan2.committed
+    assert plan2.placements == plan.placements  # stateless plan == submit
+    # Greedy rstorm on the same payload must not beat the search plan.
+    greedy_nim = Nimbus()
+    gplan = greedy_nim.plan(
+        SchedulingPayload(
+            topology=payload.topology,
+            cluster=payload.cluster,
+            scheduler=SchedulerSpec("rstorm"),
+            settings=RunSettings(simulate=False),
+        )
+    )
+    assert plan.network_cost <= gplan.network_cost
+    # Lifecycle verbs keep working on a search-scheduled state.
+    orphans = nim.fail_node(sorted(nim.cluster.nodes)[0])
+    result = nim.rebalance()
+    assert {tid for _, tid in orphans} == set(
+        result.moved.get(plan.topology_id, [])
+    ) | set(result.unplaced.get(plan.topology_id, []))
+
+
+def test_scenario_replay_with_search_is_deterministic():
+    from repro.api import (
+        ClusterSpec,
+        NodeFailEvent,
+        RebalanceEvent,
+        ScenarioRunner,
+        ScenarioSpec,
+        SchedulerSpec,
+        SubmitEvent,
+    )
+
+    spec = ScenarioSpec(
+        name="search_failover",
+        cluster=ClusterSpec(preset="emulab_12"),
+        timeline=(
+            SubmitEvent(
+                topology=T.spec("pageload"),
+                scheduler=SchedulerSpec(
+                    "rstorm-search", {"n_chains": 8, "steps": 60, "seed": 5}
+                ),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            RebalanceEvent(),
+        ),
+    )
+    t1 = ScenarioRunner(spec).run()
+    t2 = ScenarioRunner(spec).run()
+    assert t1.to_dict() == t2.to_dict()

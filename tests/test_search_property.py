@@ -1,0 +1,89 @@
+"""Hypothesis property tests for the batched search subsystem (skipped when
+the ``hypothesis`` dependency is absent — the container does not bake it in).
+
+Resource values are drawn from dyadic grids so sums are exact in float64;
+that is the domain where the subsystem guarantees jax/numpy golden equality
+and where the never-worse/no-violation properties are exact, not approximate.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    Cluster,
+    Component,
+    Topology,
+    get_scheduler,
+)
+from repro.core.search import HAS_JAX  # noqa: E402
+
+#: Dyadic memory/cpu grids (exact float sums at any count that fits a node).
+MEMS = st.sampled_from([32.0, 64.0, 128.0, 256.0, 512.0])
+CPUS = st.sampled_from([5.0, 10.0, 20.0, 40.0])
+
+
+def linear_topology(n_bolts, parallelism, mem, cpu):
+    t = Topology(f"lin{n_bolts}x{parallelism}")
+    prev = None
+    for i in range(n_bolts + 1):
+        c = Component(f"c{i}", is_spout=(i == 0), parallelism=parallelism)
+        c.set_memory_load(mem).set_cpu_load(cpu)
+        t.add_component(c)
+        if prev:
+            t.add_edge(prev, c.id)
+        prev = c.id
+    return t
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_bolts=st.integers(1, 4),
+    par=st.integers(1, 5),
+    mem=MEMS,
+    cpu=CPUS,
+    racks=st.integers(1, 3),
+    npr=st.integers(2, 6),
+    seed=st.integers(0, 100),
+)
+def test_property_search_never_worse_and_never_violates(
+    n_bolts, par, mem, cpu, racks, npr, seed
+):
+    t = linear_topology(n_bolts, par, mem, cpu)
+    cl = Cluster.homogeneous(racks=racks, nodes_per_rack=npr)
+    greedy = get_scheduler("rstorm").schedule(t, cl, commit=False)
+    cl.reset()
+    s = get_scheduler(
+        "rstorm-search", n_chains=6, steps=80, seed=seed
+    ).schedule(t, cl, commit=False)
+    # Same task partition as greedy; never a higher network cost; never a
+    # hard-constraint violation.
+    assert set(s.placements) == set(greedy.placements)
+    assert sorted(s.unassigned) == sorted(greedy.unassigned)
+    assert s.network_cost(t, cl) <= greedy.network_cost(t, cl)
+    assert s.hard_violations(t, cl) == []
+
+
+@settings(max_examples=10, deadline=None)
+@given(par=st.integers(1, 5), seed=st.integers(0, 50))
+def test_property_search_deterministic_across_runs_and_backends(par, seed):
+    t = linear_topology(3, par, 128.0, 10.0)
+    cl = Cluster.homogeneous(racks=2, nodes_per_rack=4)
+    kw = dict(n_chains=6, steps=60, seed=seed)
+    a = get_scheduler("rstorm-search", backend="numpy", **kw).schedule(
+        t, cl, commit=False
+    )
+    cl.reset()
+    b = get_scheduler("rstorm-search", backend="numpy", **kw).schedule(
+        t, cl, commit=False
+    )
+    assert a.placements == b.placements
+    if HAS_JAX:
+        cl.reset()
+        c = get_scheduler("rstorm-search", backend="jax", **kw).schedule(
+            t, cl, commit=False
+        )
+        assert a.placements == c.placements
