@@ -1,8 +1,9 @@
 """Batched placement search vs greedy R-Storm on the flagship overhead case
 (1000 tasks / 256 nodes — the same topology/cluster the scheduler-overhead
-budget gate enforces).
+budget gate enforces), plus the throughput-proxy fidelity sweep on the §6
+benchmark topology suite.
 
-Three views:
+Five views:
 
 * ``search/eval_bXXXX``   — raw batched-evaluator throughput: candidates/s
   for scoring B complete placements (feasibility + network cost) in one
@@ -10,10 +11,17 @@ Three views:
 * ``search/anneal_*``     — the chains×steps sweep: network-cost improvement
   over greedy and wall-clock for the full ``rstorm-search`` schedule call;
 * ``search/sequential_*`` — the sequential ``SwapAnnealer`` at a comparable
-  swap budget, pinning what batching buys over one-chain annealing.
+  swap budget, pinning what batching buys over one-chain annealing;
+* ``search/fidelity_*``   — proxy fidelity: Spearman rank correlation of the
+  throughput proxy against ``simulator.run`` sink throughput over a mixed
+  candidate set (greedy + annealed under both objectives + random), per
+  suite topology (acceptance bar: ≥ 0.8);
+* ``search/tp_*``         — end-to-end: simulated sink throughput of the
+  ``objective="throughput"`` search's placement vs the greedy R-Storm seed
+  (never lower, by the scheduler's simulated guarantee).
 
 Smoke mode (CI) runs one tiny 8-chain × 50-step budget plus a B=1024
-evaluator scaling row.
+evaluator scaling row and a three-case fidelity subset.
 """
 
 from __future__ import annotations
@@ -22,10 +30,14 @@ import numpy as np
 
 from repro.core import Assignment, BatchArena, Cluster, PlacementArena, get_scheduler
 from repro.core.search import resolve_backend
+from repro.core.search.anneal import BatchAnnealer
 from repro.core.search.objective import evaluate_batch
+from repro.core.search.throughput import compile_throughput, throughput_batch
+from repro.stream import Simulator
+from repro.stream import topologies as T
 
 from .bench_scheduler_overhead import chain_topology
-from .common import emit_csv_row, timed
+from .common import emit_csv_row, spearman, timed
 
 #: (n_chains, steps) sweep for the full run: breadth scaling at fixed depth
 #: (64→1024 chains), then depth scaling at fixed breadth (200→20000 steps) —
@@ -44,6 +56,109 @@ def flagship():
         racks=8, nodes_per_rack=32, memory_mb=65536.0, cpu=6400.0
     )
     return topo, cluster
+
+
+#: §6 suite for the proxy-fidelity and end-to-end throughput sweeps.
+SUITE = (
+    ("linear_net", lambda: T.linear(True)),
+    ("diamond_net", lambda: T.diamond(True)),
+    ("star_net", lambda: T.star(True)),
+    ("linear_cpu", lambda: T.linear(False)),
+    ("diamond_cpu", lambda: T.diamond(False)),
+    ("star_cpu", lambda: T.star(False)),
+    ("pageload", T.pageload),
+    ("processing", T.processing),
+)
+SMOKE_SUITE = ("linear_net", "star_cpu", "pageload")
+
+
+def _suite_cluster(name):
+    from repro.core import emulab_cluster
+
+    return emulab_cluster()
+
+
+def _candidate_mix(ba, tm, assignment, backend, n_random=12):
+    """Deterministic candidate set spanning the quality range: the greedy
+    seed, short netcost- and throughput-annealed chains from it, and seeded
+    random placements."""
+    greedy_row = ba.encode(dict(assignment.placements))
+    netc = BatchAnnealer(ba, backend=backend).run(
+        np.tile(greedy_row, (5, 1)), steps=60, seed=3
+    )
+    tpc = BatchAnnealer(ba, backend=backend).run(
+        np.tile(greedy_row, (4, 1)), steps=60, seed=5,
+        objective="throughput", tm=tm,
+    )
+    rng = np.random.Generator(np.random.Philox(0))
+    alive = np.flatnonzero(ba.alive)
+    rand = alive[rng.integers(0, alive.size, size=(n_random, ba.n_tasks))]
+    return np.concatenate([greedy_row[None, :], netc, tpc, rand], axis=0)
+
+
+def run_fidelity(smoke: bool = False) -> list:
+    """Proxy-vs-simulator sweep: rank fidelity + end-to-end throughput."""
+    backend = resolve_backend("auto")
+    rows = []
+    for name, maker in SUITE:
+        if smoke and name not in SMOKE_SUITE:
+            continue
+        topo, cluster = maker(), _suite_cluster(name)
+        arena = PlacementArena(cluster, topo)
+        avail0 = arena.snapshot()
+        seed_assignment = Assignment(topology_id=topo.id)
+        get_scheduler("rstorm")._place_on_arena(arena, topo, seed_assignment)
+        ba = BatchArena.from_arena(
+            arena, topo, dict(seed_assignment.placements), avail0=avail0
+        )
+        tm = compile_throughput(ba, topo, cluster)
+        P = _candidate_mix(ba, tm, seed_assignment, backend)
+        (proxy, secs) = timed(
+            lambda: throughput_batch(ba, tm, P, backend=backend), repeat=1
+        )
+        sim = Simulator(cluster)
+        sim_tp = np.array(
+            [
+                sim.run(
+                    topo, Assignment(topo.id, placements=ba.decode(P[b]))
+                ).sink_throughput
+                for b in range(P.shape[0])
+            ]
+        )
+        rho = spearman(proxy, sim_tp)
+        emit_csv_row(
+            f"search/fidelity_{name}",
+            secs * 1e6 / P.shape[0],
+            f"spearman={rho:.3f};candidates={P.shape[0]};backend={backend}",
+        )
+        rows.append(("fidelity", name, rho))
+
+        # End-to-end: the throughput-objective search vs the greedy seed,
+        # both measured by the simulator.
+        cluster.reset()
+        sched = get_scheduler(
+            "rstorm-search",
+            n_chains=8 if smoke else 16,
+            steps=100 if smoke else 600,
+            seed=0,
+            objective="throughput",
+        )
+        a, secs = timed(lambda: sched.schedule(topo, cluster, commit=False), repeat=1)
+        cluster.reset()
+        tp_s = sim.run(topo, a).sink_throughput
+        tp_g = sim.run(
+            topo,
+            Assignment(topo.id, placements=dict(seed_assignment.placements)),
+        ).sink_throughput
+        gain = (tp_s / tp_g - 1.0) * 100.0 if tp_g > 0 else 0.0
+        emit_csv_row(
+            f"search/tp_{name}",
+            secs * 1e6,
+            f"sink_tp={tp_s:.1f};greedy_tp={tp_g:.1f};gain_pct={gain:+.2f};"
+            f"never_worse={tp_s >= tp_g};backend={backend}",
+        )
+        rows.append(("tp", name, tp_s, tp_g))
+    return rows
 
 
 def run(smoke: bool = False) -> list:
@@ -116,6 +231,30 @@ def run(smoke: bool = False) -> list:
         f"netcost={net};improvement_pct={100.0 * (greedy_net - net) / greedy_net:.2f}",
     )
     rows.append(("sequential", seq_iters, net, secs))
+
+    # Proxy fidelity + end-to-end throughput over the §6 suite.
+    rows.extend(run_fidelity(smoke=smoke))
+
+    # Flagship end-to-end: throughput objective on the 1000×256 case (the
+    # chain topology is acked, so the ack term carries the ranking there).
+    if not smoke:
+        cluster.reset()
+        sched = get_scheduler(
+            "rstorm-search", n_chains=16, steps=2000, seed=0,
+            objective="throughput",
+        )
+        a, secs = timed(lambda: sched.schedule(topo, cluster, commit=False), repeat=1)
+        cluster.reset()
+        sim = Simulator(cluster)
+        tp_s = sim.run(topo, a).sink_throughput
+        tp_g = sim.run(topo, greedy).sink_throughput
+        emit_csv_row(
+            f"search/tp_flagship_t{tasks}",
+            secs * 1e6,
+            f"sink_tp={tp_s:.1f};greedy_tp={tp_g:.1f};"
+            f"gain_pct={(tp_s / tp_g - 1.0) * 100.0:+.2f};never_worse={tp_s >= tp_g}",
+        )
+        rows.append(("tp_flagship", tp_s, tp_g))
     return rows
 
 

@@ -1,0 +1,104 @@
+"""CI quality-regression gate over the benchmark trajectory.
+
+Compares a fresh ``BENCH_smoke.json`` (written by ``benchmarks.run --smoke``)
+against the committed ``BENCH_baseline.json`` and fails on a >20% regression
+in any *deterministic quality* metric parsed from the rows' ``derived``
+fields:
+
+* lower-is-better: ``netcost``;
+* higher-is-better: ``sink_tp``, ``tp``, ``spearman``, ``greedy_tp``,
+  ``tp_initial``, ``tp_final``, ``tp_recovered``.
+
+Wall-clock columns (``us_per_call``, ``cand_per_s``) are deliberately NOT
+gated — they are machine-dependent; the scheduler-overhead budget gate owns
+latency.  The quality metrics are pure functions of fixed seeds, so both CI
+legs (jax and nojax) compare against the same baseline (the search subsystem
+is golden-equal across backends).
+
+A baseline row missing from the fresh run fails the gate too (silent loss of
+coverage reads as "no regression").  After an *intentional* change in
+benchmark output, regenerate with::
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    cp BENCH_smoke.json BENCH_baseline.json
+
+Usage: python -m benchmarks.check_bench_regression [fresh] [baseline] [tol]
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+TOLERANCE = 0.20
+
+LOWER_IS_BETTER = ("netcost",)
+HIGHER_IS_BETTER = (
+    "sink_tp",
+    "tp",
+    "spearman",
+    "greedy_tp",
+    "tp_initial",
+    "tp_final",
+    "tp_recovered",
+)
+
+_FLOAT = r"([-+]?\d+(?:\.\d+)?(?:[eE][-+]?\d+)?)"
+
+
+def parse_metrics(derived: str) -> dict:
+    """``key=<float><junk>;...`` pairs for the gated keys only."""
+    out = {}
+    for key in LOWER_IS_BETTER + HIGHER_IS_BETTER:
+        m = re.search(rf"(?:^|;){key}={_FLOAT}", derived)
+        if m:
+            out[key] = float(m.group(1))
+    return out
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as fh:
+        data = json.load(fh)
+    return {row["name"]: parse_metrics(row.get("derived", "")) for row in data["rows"]}
+
+
+def main() -> int:
+    fresh_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json"
+    base_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_baseline.json"
+    tol = float(sys.argv[3]) if len(sys.argv) > 3 else TOLERANCE
+    fresh, base = load_rows(fresh_path), load_rows(base_path)
+    failures = []
+    checked = 0
+    for name, metrics in sorted(base.items()):
+        if not metrics:
+            continue
+        if name not in fresh:
+            failures.append(f"{name}: row missing from {fresh_path}")
+            continue
+        for key, old in metrics.items():
+            if key not in fresh[name]:
+                failures.append(f"{name}: metric {key} missing from fresh run")
+                continue
+            new = fresh[name][key]
+            checked += 1
+            if key in LOWER_IS_BETTER:
+                bad = old > 0 and new > old * (1.0 + tol)
+                arrow = f"{old:g} -> {new:g} (+{(new / old - 1) * 100:.1f}%)" if old else ""
+            else:
+                bad = old > 0 and new < old * (1.0 - tol)
+                arrow = f"{old:g} -> {new:g} ({(new / old - 1) * 100:+.1f}%)" if old else ""
+            if bad:
+                failures.append(f"{name}: {key} regressed {arrow}")
+    print(
+        f"bench-regression gate: {checked} metrics checked against "
+        f"{base_path} (tolerance {tol:.0%}) -> "
+        f"{'FAIL' if failures else 'OK'}"
+    )
+    for f in failures:
+        print(f"  REGRESSION: {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

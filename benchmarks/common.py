@@ -78,6 +78,32 @@ ROWS: List[Dict[str, object]] = []
 CURRENT_BENCH: str = ""
 
 
+def spearman(x, y) -> float:
+    """Spearman rank correlation with average ranks for ties (no scipy in
+    the container) — the proxy-fidelity statistic ``bench_search`` reports."""
+    import numpy as np
+
+    def rank(v):
+        v = np.asarray(v, dtype=np.float64)
+        order = np.argsort(v, kind="stable")
+        r = np.empty(len(v))
+        r[order] = np.arange(len(v), dtype=np.float64)
+        out = r.copy()
+        for val in np.unique(v):
+            m = v == val
+            out[m] = r[m].mean()
+        return out
+
+    rx, ry = rank(x), rank(y)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = float(np.sqrt((rx**2).sum() * (ry**2).sum()))
+    # A constant input carries zero ranking information — report nan (the
+    # regression gate then flags the metric as missing) rather than a
+    # vacuous 1.0 that would mask total fidelity collapse.
+    return float((rx * ry).sum() / denom) if denom > 0 else float("nan")
+
+
 def timed(fn: Callable, *args, repeat: int = 3, **kwargs) -> Tuple[object, float]:
     """Run fn; return (result, best wall-time seconds)."""
     best = float("inf")

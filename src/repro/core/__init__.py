@@ -41,7 +41,10 @@ from .search import (
     BatchAnnealer,
     BatchArena,
     SearchScheduler,
+    ThroughputModel,
+    compile_throughput,
     evaluate_batch,
+    throughput_batch,
 )
 
 __all__ = [
@@ -68,7 +71,10 @@ __all__ = [
     "BatchAnnealer",
     "BatchArena",
     "SearchScheduler",
+    "ThroughputModel",
+    "compile_throughput",
     "evaluate_batch",
+    "throughput_batch",
     "Assignment",
     "Scheduler",
     "RStormScheduler",

@@ -146,6 +146,12 @@ class PlacementArena:
         self._w_soft = self.weight_row[self._soft_cols]
         self._w_bw = merged.get(BANDWIDTH, 1.0)
 
+    @property
+    def rack_of(self) -> np.ndarray:
+        """(N,) rack index per node (into ``rack_ids``) — the rack topology
+        the batched search's link-flow proxy reduces over."""
+        return self._rack_of
+
     # -- demand compilation ----------------------------------------------------
     def compile_demand(self, rv: ResourceVector) -> Tuple[np.ndarray, np.ndarray]:
         """(row over arena dims, hard-column index array) for one demand."""

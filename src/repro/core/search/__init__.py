@@ -1,17 +1,24 @@
 # Batched placement-search subsystem: lifts the PlacementArena's dense
 # arrays into a BatchArena and evaluates thousands of candidate placements
 # in parallel (jax-vmapped when available, numpy fallback otherwise).
+# Two objectives: network cost (QM3DKP) and the simulator-derived
+# throughput proxy (what the paper's §6 actually measures).
 from .backend import HAS_JAX, resolve_backend
 from .batch import BatchArena
 from .objective import evaluate_batch
-from .anneal import BatchAnnealer
+from .throughput import ThroughputModel, compile_throughput, throughput_batch
+from .anneal import BatchAnnealer, OBJECTIVES
 from .portfolio import SearchScheduler
 
 __all__ = [
     "BatchAnnealer",
     "BatchArena",
     "HAS_JAX",
+    "OBJECTIVES",
     "SearchScheduler",
+    "ThroughputModel",
+    "compile_throughput",
     "evaluate_batch",
     "resolve_backend",
+    "throughput_batch",
 ]

@@ -27,7 +27,7 @@ infeasible seeds (random init) are driven toward feasibility first.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -35,6 +35,17 @@ from ..engine.arena import swap_network_delta, swap_overload_delta
 from .backend import jax_modules, resolve_backend, x64
 from .batch import BatchArena
 from .objective import OVERLOAD_PENALTY
+from .throughput import (
+    ThroughputModel,
+    ack_lambda,
+    aggregates_numpy,
+    hard_lambda,
+    proxy_from_state,
+    swap_state_terms,
+)
+
+#: Registry-visible objective modes for the batched annealer / search.
+OBJECTIVES = ("netcost", "throughput")
 
 #: Initial accept threshold, in net-distance hops: early steps may accept
 #: swaps that worsen the placement by up to this much, escaping the greedy
@@ -64,10 +75,32 @@ class BatchAnnealer:
         self.backend = resolve_backend(backend)
 
     def run(
-        self, P0: np.ndarray, steps: int, seed: int, t0: float = DEFAULT_T0
+        self,
+        P0: np.ndarray,
+        steps: int,
+        seed: int,
+        t0: float = DEFAULT_T0,
+        objective: str = "netcost",
+        tm: Optional[ThroughputModel] = None,
     ) -> np.ndarray:
         """Anneal every chain of ``P0`` (B, T) for ``steps`` proposals each;
-        returns the final (B, T) batch (numpy, regardless of backend)."""
+        returns the final (B, T) batch (numpy, regardless of backend).
+
+        ``objective="netcost"`` (default) accepts on Δ(net + penalty ×
+        violation) ≤ threshold.  ``objective="throughput"`` (requires a
+        compiled ``ThroughputModel``) *maximizes* the throughput proxy with
+        netcost as the annealed tie-break: a swap is accepted iff it reduces
+        hard violation, or — violation unchanged — raises the proxy, or —
+        proxy unchanged (the min-bound plateaus often) — passes the netcost
+        threshold test.  All comparisons are of exact float64 quantities
+        (grid-quantized state), so both backends walk identical chains.
+        """
+        if objective not in OBJECTIVES:
+            raise ValueError(
+                f"unknown objective {objective!r}; choose from {OBJECTIVES}"
+            )
+        if objective == "throughput" and tm is None:
+            raise ValueError("objective='throughput' requires a ThroughputModel")
         P0 = np.ascontiguousarray(np.atleast_2d(P0))
         n_chains, n_tasks = P0.shape
         if n_tasks != self.ba.n_tasks:
@@ -79,6 +112,10 @@ class BatchAnnealer:
         ii, jj = swap_proposals(n_tasks, steps, n_chains, seed)
         thresh = np.linspace(float(t0), 0.0, steps)
         used0 = self.ba.used(P0)
+        if objective == "throughput":
+            if self.backend == "jax":
+                return self._run_jax_tp(P0, used0, ii, jj, thresh, tm)
+            return self._run_numpy_tp(P0, used0, ii, jj, thresh, tm)
         if self.backend == "jax":
             return self._run_jax(P0, used0, ii, jj, thresh)
         return self._run_numpy(P0, used0, ii, jj, thresh)
@@ -109,6 +146,106 @@ class BatchAnnealer:
             np.add.at(used, (bidx, na), du)
             np.add.at(used, (bidx, nb), -du)
         return P
+
+    # -- numpy fallback, throughput objective ----------------------------------
+    def _run_numpy_tp(self, P0, used0, ii, jj, thresh, tm) -> np.ndarray:
+        ba = self.ba
+        P = P0.astype(np.intp, copy=True)
+        used = used0.copy()
+        B = P.shape[0]
+        bidx = np.arange(B)
+        cpu_load, mem_used, egress, ingress, rack_up, ack_num = aggregates_numpy(
+            ba, tm, P
+        )
+        nic_cap, rack_cap = tm.nic_cap, tm.rack_cap
+        tp = proxy_from_state(
+            cpu_load, mem_used, egress, ingress, rack_up, ack_num, tm
+        )
+        for s in range(ii.shape[0]):
+            i, j = ii[s], jj[s]
+            na, nb = P[bidx, i], P[bidx, j]
+            ai, mi = ba.adj[i], ba.adj_mask[i]
+            aj, mj = ba.adj[j], ba.adj_mask[j]
+            pa = P[bidx[:, None], np.where(mi, ai, 0)]
+            pb = P[bidx[:, None], np.where(mj, aj, 0)]
+            m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
+            dnet = swap_network_delta(ba.net, na, nb, pa, pb, m_ab, mi, mj)
+            di, dj = ba.hard_demand[i], ba.hard_demand[j]
+            dov = swap_overload_delta(
+                ba.avail[na], ba.avail[nb], used[bidx, na], used[bidx, nb], di, dj
+            )
+            # Candidate throughput state (functional copies; committed only
+            # where accepted).
+            dc = tm.task_cpu[j] - tm.task_cpu[i]
+            dm = tm.task_mem[j] - tm.task_mem[i]
+            cl, mu = cpu_load.copy(), mem_used.copy()
+            cl[bidx, na] += dc
+            cl[bidx, nb] -= dc
+            mu[bidx, na] += dm
+            mu[bidx, nb] -= dm
+            eg, ing, rk, an = (
+                egress.copy(), ingress.copy(), rack_up.copy(), ack_num.copy(),
+            )
+            (ei, ev, ii2, iv, ri, rv, ci, cv) = swap_state_terms(
+                P, bidx, i, j, na, nb,
+                ba.adj, tm.adj_bytes, tm.adj_src, tm.adj_comp, tm.adj_lat,
+                tm.rack_of,
+            )
+            np.add.at(eg, (bidx[:, None], ei), ev)
+            np.add.at(ing, (bidx[:, None], ii2), iv)
+            np.add.at(rk, (bidx[:, None], ri), rv)
+            np.add.at(an, (bidx[:, None], ci), cv)
+            lam = hard_lambda(
+                cl, mu, eg, ing, rk,
+                tm.cpu_cap, tm.mem_cap, nic_cap, rack_cap,
+                tm.thrash_factor, tm.source_bound,
+            )
+            tp_new = np.minimum(
+                lam, ack_lambda(an, tm.den_flow, tm.ack)
+            ) * tm.sink_rate
+            # Compare tp_new/tp directly — forming tp_new - tp would invite
+            # XLA to contract the final multiply and the subtract into one
+            # FMA on the jax path, yielding sub-ulp nonzero "differences"
+            # where the plateau is exact (backend golden equality hinges on
+            # both paths asking the same question of the same bits).
+            accept = (na != nb) & (
+                (dov < 0.0)
+                | (
+                    (dov == 0.0)
+                    & ((tp_new > tp) | ((tp_new == tp) & (dnet <= thresh[s])))
+                )
+            )
+            P[bidx, i] = np.where(accept, nb, na)
+            P[bidx, j] = np.where(accept, na, nb)
+            du = np.where(accept[:, None], dj - di, 0.0)
+            np.add.at(used, (bidx, na), du)
+            np.add.at(used, (bidx, nb), -du)
+            w = accept[:, None]
+            cpu_load = np.where(w, cl, cpu_load)
+            mem_used = np.where(w, mu, mem_used)
+            egress = np.where(w, eg, egress)
+            ingress = np.where(w, ing, ingress)
+            rack_up = np.where(w, rk, rack_up)
+            ack_num = np.where(w, an, ack_num)
+            tp = np.where(accept, tp_new, tp)
+        return P
+
+    # -- jax scan, throughput objective ----------------------------------------
+    def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm) -> np.ndarray:
+        ba = self.ba
+        state0 = aggregates_numpy(ba, tm, P0.astype(np.intp))
+        with x64():
+            P = _jax_anneal_tp_fn(tm.ack)(
+                ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
+                tm.task_cpu, tm.task_mem, tm.cpu_cap, tm.mem_cap,
+                tm.nic_cap, tm.rack_cap, tm.adj_bytes, tm.adj_src,
+                tm.adj_comp, tm.adj_lat, tm.rack_of, tm.den_flow,
+                np.float64(tm.thrash_factor), np.float64(tm.source_bound),
+                np.float64(tm.sink_rate),
+                P0.astype(np.int32), used0, state0,
+                ii.astype(np.int32), jj.astype(np.int32), thresh,
+            )
+        return np.asarray(P).astype(np.intp)
 
     # -- jax scan --------------------------------------------------------------
     def _run_jax(self, P0, used0, ii, jj, thresh) -> np.ndarray:
@@ -162,6 +299,97 @@ def _jax_anneal_fn():
             return (P, used), None
 
         (P, _), _ = jax.lax.scan(step, (P0, used0), (ii, jj, thresh))
+        return P
+
+    return anneal
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_anneal_tp_fn(ack):
+    """jit-compiled lax.scan for the throughput objective — the same
+    per-step math as ``BatchAnnealer._run_numpy_tp`` (one cached callable
+    per topology structure: the AckPlan is the static key; every model
+    array is a traced argument so no constants are baked in)."""
+    jax, jnp = jax_modules()
+
+    @jax.jit
+    def anneal(
+        net, avail, hard_demand, adj, adj_mask,
+        task_cpu, task_mem, cpu_cap, mem_cap, nic_cap, rack_cap,
+        adj_bytes, adj_src, adj_comp, adj_lat, rack_of, den_flow,
+        thrash_factor, source_bound, sink_rate,
+        P0, used0, state0, ii, jj, thresh,
+    ):
+        bidx = jnp.arange(P0.shape[0])
+        cpu0, mem0, eg0, in0, rk0, an0 = state0
+        tp0 = jnp.minimum(
+            hard_lambda(
+                cpu0, mem0, eg0, in0, rk0,
+                cpu_cap, mem_cap, nic_cap, rack_cap,
+                thrash_factor, source_bound, xp=jnp,
+            ),
+            ack_lambda(an0, den_flow, ack, xp=jnp),
+        ) * sink_rate
+
+        def step(carry, xs):
+            P, used, cpu_load, mem_used, egress, ingress, rack_up, ack_num, tp = carry
+            i, j, th = xs
+            na, nb = P[bidx, i], P[bidx, j]
+            ai, mi = adj[i], adj_mask[i]
+            aj, mj = adj[j], adj_mask[j]
+            pa = P[bidx[:, None], jnp.where(mi, ai, 0)]
+            pb = P[bidx[:, None], jnp.where(mj, aj, 0)]
+            m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
+            dnet = swap_network_delta(net, na, nb, pa, pb, m_ab, mi, mj, xp=jnp)
+            di, dj = hard_demand[i], hard_demand[j]
+            dov = swap_overload_delta(
+                avail[na], avail[nb], used[bidx, na], used[bidx, nb], di, dj, xp=jnp
+            )
+            dc = task_cpu[j] - task_cpu[i]
+            dm = task_mem[j] - task_mem[i]
+            cl = cpu_load.at[bidx, na].add(dc).at[bidx, nb].add(-dc)
+            mu = mem_used.at[bidx, na].add(dm).at[bidx, nb].add(-dm)
+            (ei, ev, ij2, iv, ri, rv, ci, cv) = swap_state_terms(
+                P, bidx, i, j, na, nb,
+                adj, adj_bytes, adj_src, adj_comp, adj_lat, rack_of, xp=jnp,
+            )
+            col = bidx[:, None]
+            eg = egress.at[col, ei].add(ev)
+            ing = ingress.at[col, ij2].add(iv)
+            rk = rack_up.at[col, ri].add(rv)
+            an = ack_num.at[col, ci].add(cv)
+            lam = hard_lambda(
+                cl, mu, eg, ing, rk,
+                cpu_cap, mem_cap, nic_cap, rack_cap,
+                thrash_factor, source_bound, xp=jnp,
+            )
+            tp_new = jnp.minimum(lam, ack_lambda(an, den_flow, ack, xp=jnp)) * sink_rate
+            # Direct comparisons, not tp_new - tp: a subtract after the
+            # multiply is FMA-contractible under XLA (see the numpy twin).
+            accept = (na != nb) & (
+                (dov < 0.0)
+                | ((dov == 0.0) & ((tp_new > tp) | ((tp_new == tp) & (dnet <= th))))
+            )
+            P = P.at[bidx, i].set(jnp.where(accept, nb, na))
+            P = P.at[bidx, j].set(jnp.where(accept, na, nb))
+            du = jnp.where(accept[:, None], dj - di, 0.0)
+            used = used.at[bidx, na].add(du).at[bidx, nb].add(-du)
+            w = accept[:, None]
+            carry = (
+                P,
+                used,
+                jnp.where(w, cl, cpu_load),
+                jnp.where(w, mu, mem_used),
+                jnp.where(w, eg, egress),
+                jnp.where(w, ing, ingress),
+                jnp.where(w, rk, rack_up),
+                jnp.where(w, an, ack_num),
+                jnp.where(accept, tp_new, tp),
+            )
+            return carry, None
+
+        carry0 = (P0, used0, cpu0, mem0, eg0, in0, rk0, an0, tp0)
+        (P, *_), _ = jax.lax.scan(step, carry0, (ii, jj, thresh))
         return P
 
     return anneal

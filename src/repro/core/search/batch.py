@@ -51,6 +51,9 @@ class BatchArena:
     edges: np.ndarray  # (E, 2) intp task-index pairs
     adj: np.ndarray  # (T, max_deg) intp, -1 padded
     adj_mask: np.ndarray  # (T, max_deg) bool
+    # Rack topology (throughput-proxy link flows): rack index per node.
+    rack_of: Optional[np.ndarray] = None  # (N,) intp
+    n_racks: int = 0
 
     @property
     def n_nodes(self) -> int:
@@ -130,6 +133,8 @@ class BatchArena:
             edges=edges,
             adj=adj,
             adj_mask=adj_mask,
+            rack_of=arena.rack_of.copy(),
+            n_racks=len(arena.rack_ids),
         )
 
     # -- placement codecs ------------------------------------------------------

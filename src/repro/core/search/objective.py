@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import numpy as np
 
@@ -38,6 +39,10 @@ class BatchEval:
     net: np.ndarray  # (B,) float64
     violation: np.ndarray  # (B,) float64
     dead: np.ndarray  # (B,) int64
+    # (B,) float64 throughput proxy (tuples/s), populated only when a
+    # ThroughputModel was passed to ``evaluate_batch`` — the quantity the
+    # "throughput" search objective maximizes.
+    throughput: Optional[np.ndarray] = None
 
     @property
     def feasible(self) -> np.ndarray:
@@ -86,16 +91,25 @@ def _jax_eval_fn(n_nodes: int):
     return evaluate
 
 
-def _evaluate_jax(ba: BatchArena, P: np.ndarray) -> BatchEval:
+def _evaluate_jax(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
+    B = P.shape[0]
+    net = np.zeros(B, dtype=np.float64)
+    viol = np.zeros(B, dtype=np.float64)
+    dead = np.zeros(B, dtype=np.int64)
+    fn = _jax_eval_fn(ba.n_nodes)
     with x64():
-        net, viol, dead = _jax_eval_fn(ba.n_nodes)(
-            ba.net, ba.avail, ba.hard_demand, ba.alive, ba.edges, P
-        )
-    return BatchEval(
-        net=np.asarray(net, dtype=np.float64),
-        violation=np.asarray(viol, dtype=np.float64),
-        dead=np.asarray(dead, dtype=np.int64),
-    )
+        # Chunked like the numpy path: the (chunk, E) gather is the working
+        # set, so a huge batch never materializes one (B, E) intermediate.
+        # At most two compiled shapes per batch size (full chunk + tail).
+        for lo in range(0, B, chunk):
+            n, v, d = fn(
+                ba.net, ba.avail, ba.hard_demand, ba.alive, ba.edges,
+                P[lo : lo + chunk],
+            )
+            net[lo : lo + chunk] = np.asarray(n, dtype=np.float64)
+            viol[lo : lo + chunk] = np.asarray(v, dtype=np.float64)
+            dead[lo : lo + chunk] = np.asarray(d, dtype=np.int64)
+    return BatchEval(net=net, violation=viol, dead=dead)
 
 
 def evaluate_batch(
@@ -103,17 +117,33 @@ def evaluate_batch(
     placements: np.ndarray,
     backend: str = "auto",
     chunk: int = 256,
+    throughput_model=None,
 ) -> BatchEval:
     """Score a batch of candidate placements ``(B, T)`` (or one ``(T,)`` row).
 
-    ``chunk`` bounds the numpy path's working set (the (chunk, E) gather);
-    the jax path evaluates the whole batch in one vmapped call.
+    ``chunk`` bounds the per-call working set (the (chunk, E) edge gather)
+    on *both* backends; results are independent of the chunking.  Passing a
+    ``ThroughputModel`` (``search.throughput.compile_throughput``) also
+    populates ``BatchEval.throughput`` with the per-candidate proxy.
     """
     P = np.ascontiguousarray(np.atleast_2d(placements))
     if P.shape[1] != ba.n_tasks:
         raise ValueError(
             f"placement batch has {P.shape[1]} tasks, arena has {ba.n_tasks}"
         )
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
     if resolve_backend(backend) == "jax":
-        return _evaluate_jax(ba, P)
-    return _evaluate_numpy(ba, P, chunk)
+        out = _evaluate_jax(ba, P, chunk)
+    else:
+        out = _evaluate_numpy(ba, P, chunk)
+    if throughput_model is not None:
+        from .throughput import throughput_batch
+
+        out = dataclasses.replace(
+            out,
+            throughput=throughput_batch(
+                ba, throughput_model, P, backend=backend, chunk=chunk
+            ),
+        )
+    return out

@@ -40,8 +40,15 @@ import dataclasses
 import math
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from ..core.assignment import Assignment
 from ..core.cluster import Cluster
+# One source of truth for "binding bound" semantics: the scalar simulator
+# reduces its per-node usage/capacity dicts through the same array-form
+# helper the batched throughput proxy vmaps over (core imports no stream
+# module at import time, so this direction is cycle-free).
+from ..core.search.throughput import capacity_bound
 from ..core.topology import Component, Topology
 from .network import EMULAB_NETWORK, NetworkModel
 
@@ -346,13 +353,17 @@ class Simulator:
         thrashed: Sequence[str],
     ) -> float:
         """Strict work-conserving bound: Σ rate×cost per node ≤ capacity."""
-        b = math.inf
-        for nid, use in load.cpu.items():
-            cap = self._eff_cpu_capacity(nid, thrashed)
-            cap -= sum(o.cpu.get(nid, 0.0) * lo for o, lo in other)
-            if use > _EPS:
-                b = min(b, max(cap, 0.0) / use)
-        return b
+        nids = sorted(load.cpu)
+        use = np.array([load.cpu[n] for n in nids], dtype=np.float64)
+        cap = np.array(
+            [
+                self._eff_cpu_capacity(n, thrashed)
+                - sum(o.cpu.get(n, 0.0) * lo for o, lo in other)
+                for n in nids
+            ],
+            dtype=np.float64,
+        )
+        return float(capacity_bound(use, cap))
 
     def _bandwidth_bound(
         self,
@@ -360,18 +371,23 @@ class Simulator:
         other: Sequence[Tuple[_TopologyLoad, float]],
     ) -> float:
         b = math.inf
-        for direction in ("egress", "ingress"):
+        for direction, link_bw in (
+            ("egress", self.network.nic_bw),
+            ("ingress", self.network.nic_bw),
+            ("rack_up", self.network.rack_uplink_bw),
+        ):
             mine: Dict[str, float] = getattr(load, direction)
-            for nid, use in mine.items():
-                cap = self.network.nic_bw
-                cap -= sum(getattr(o, direction).get(nid, 0.0) * lo for o, lo in other)
-                if use > _EPS:
-                    b = min(b, max(cap, 0.0) / use)
-        for rid, use in load.rack_up.items():
-            cap = self.network.rack_uplink_bw
-            cap -= sum(o.rack_up.get(rid, 0.0) * lo for o, lo in other)
-            if use > _EPS:
-                b = min(b, max(cap, 0.0) / use)
+            ids = sorted(mine)
+            use = np.array([mine[i] for i in ids], dtype=np.float64)
+            cap = np.array(
+                [
+                    link_bw
+                    - sum(getattr(o, direction).get(i, 0.0) * lo for o, lo in other)
+                    for i in ids
+                ],
+                dtype=np.float64,
+            )
+            b = min(b, float(capacity_bound(use, cap)))
         return b
 
     # -- latency / ack loop -----------------------------------------------------------
@@ -476,6 +492,9 @@ class Simulator:
         """Saturating flow: each task processes min(arrivals, μ); excess is
         shed.  Per-task propagation along the placement-dependent routes."""
         topo = load.topology
+        comp_of_task = {
+            t.id: cid for cid, c in topo.components.items() for t in c.tasks(topo.id)
+        }
         task_in: Dict[str, float] = {}
         comp_done: Dict[str, float] = {}
         for cid in _topo_order(topo):
@@ -494,7 +513,6 @@ class Simulator:
                 done_c += done
                 out = done * (1.0 if comp.is_spout else comp.emit_ratio)
                 routes = load.routes.get(t.id, [])
-                total_share = sum(s for _, s in routes)
                 # Distribute proportionally to the lossless routing shares;
                 # a task's routes may span several downstream components.
                 per_dst: Dict[str, float] = {}
@@ -503,9 +521,28 @@ class Simulator:
                 denom = load.task_rate.get(t.id, 0.0) * (
                     1.0 if comp.is_spout else comp.emit_ratio
                 )
-                for tid, s in per_dst.items():
-                    frac = s / denom if denom > _EPS else 0.0
-                    task_in[tid] = task_in.get(tid, 0.0) + out * frac
+                if denom > _EPS:
+                    for tid, s in per_dst.items():
+                        task_in[tid] = task_in.get(tid, 0.0) + out * (s / denom)
+                elif routes:
+                    # Zero-lossless-rate source (a vanishing upstream emit
+                    # ratio drives task_rate below _EPS while the shed flow
+                    # is still nonzero): the lossless shares carry no
+                    # information, so split by raw route multiplicity
+                    # instead of silently dropping the downstream flow.
+                    # Broadcast semantics as in the normal branch: every
+                    # downstream *component* receives the full stream, so
+                    # multiplicities normalize per destination component.
+                    counts: Dict[str, int] = {}
+                    comp_routes: Dict[str, int] = {}
+                    for tid, _ in routes:
+                        counts[tid] = counts.get(tid, 0) + 1
+                        dc = comp_of_task[tid]
+                        comp_routes[dc] = comp_routes.get(dc, 0) + 1
+                    for tid, k in counts.items():
+                        task_in[tid] = task_in.get(tid, 0.0) + out * (
+                            k / comp_routes[comp_of_task[tid]]
+                        )
             comp_done[cid] = done_c
         return sum(comp_done[s.id] for s in topo.sinks())
 

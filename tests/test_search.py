@@ -16,6 +16,7 @@ from repro.core import (
     BatchArena,
     Cluster,
     Component,
+    NodeSpec,
     PlacementArena,
     SearchScheduler,
     Topology,
@@ -27,7 +28,8 @@ from repro.core import (
 from repro.core.engine import swap_network_delta, swap_overload_delta
 from repro.core.search import BatchAnnealer, HAS_JAX
 from repro.core.search.anneal import swap_proposals
-from repro.stream import topologies as T
+from repro.core.search.throughput import compile_throughput, throughput_batch
+from repro.stream import Simulator, topologies as T
 
 BACKENDS = ["numpy"] + (["jax"] if HAS_JAX else [])
 
@@ -332,6 +334,232 @@ def test_nimbus_plan_submit_rebalance_with_search():
     assert {tid for _, tid in orphans} == set(
         result.moved.get(plan.topology_id, [])
     ) | set(result.unplaced.get(plan.topology_id, []))
+
+
+# -- throughput proxy (the §6 objective) --------------------------------------------
+def tp_case(maker=T.pageload):
+    topology, cluster, arena, assignment, ba = compile_case(
+        maker, lambda: emulab_cluster()
+    )
+    tm = compile_throughput(ba, topology, cluster)
+    return topology, cluster, assignment, ba, tm
+
+
+@pytest.mark.parametrize("maker", [T.pageload, T.processing, lambda: T.linear(True)])
+def test_throughput_proxy_deterministic(maker):
+    topology, cluster, assignment, ba, tm = tp_case(maker)
+    P = random_batch(ba, 12, seed=5)
+    a = throughput_batch(ba, tm, P, backend="numpy")
+    tm2 = compile_throughput(ba, topology, cluster)
+    b = throughput_batch(ba, tm2, P, backend="numpy")
+    assert (a == b).all()
+    assert np.isfinite(a).all() and (a >= 0.0).all()
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+@pytest.mark.parametrize(
+    "maker",
+    [T.pageload, T.processing, lambda: T.linear(True), lambda: T.star(False)],
+)
+def test_throughput_proxy_backends_bit_identical(maker):
+    """Same golden-equality bar as evaluate_batch: the grid-quantized
+    reductions make numpy and jax agree to the last bit."""
+    topology, cluster, assignment, ba, tm = tp_case(maker)
+    P = random_batch(ba, 16, seed=7)
+    P[0] = ba.encode(dict(assignment.placements))
+    a = throughput_batch(ba, tm, P, backend="numpy")
+    b = throughput_batch(ba, tm, P, backend="jax")
+    assert (a == b).all()
+
+
+def test_throughput_proxy_matches_simulator_in_cpu_bound_regime():
+    """Where the paper's §6.3.2 analysis is exact (uniform shuffle, CPU
+    binding), the proxy *is* the simulator's answer for the greedy seed."""
+    for maker in (lambda: T.linear(False), lambda: T.star(False)):
+        topology, cluster, assignment, ba, tm = tp_case(maker)
+        proxy = float(
+            throughput_batch(ba, tm, ba.encode(dict(assignment.placements)))[0]
+        )
+        sim = Simulator(cluster).run(topology, assignment).sink_throughput
+        assert proxy == pytest.approx(sim, rel=1e-6)
+
+
+def test_evaluate_batch_populates_throughput_field():
+    topology, cluster, assignment, ba, tm = tp_case()
+    P = random_batch(ba, 6, seed=3)
+    plain = evaluate_batch(ba, P, backend="numpy")
+    assert plain.throughput is None
+    full = evaluate_batch(ba, P, backend="numpy", throughput_model=tm)
+    assert full.throughput is not None
+    assert (full.throughput == throughput_batch(ba, tm, P, backend="numpy")).all()
+    assert (full.net == plain.net).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_evaluate_batch_chunked_equals_unchunked(backend):
+    """Regression: ``chunk`` used to be ignored on the jax path — a huge
+    batch built one monolithic (B, E) gather.  Chunked results must be
+    bit-identical to unchunked on both backends."""
+    topology, cluster, assignment, ba, tm = tp_case()
+    P = random_batch(ba, 11, seed=9)
+    whole = evaluate_batch(ba, P, backend=backend, chunk=1024, throughput_model=tm)
+    parts = evaluate_batch(ba, P, backend=backend, chunk=3, throughput_model=tm)
+    assert (whole.net == parts.net).all()
+    assert (whole.violation == parts.violation).all()
+    assert (whole.dead == parts.dead).all()
+    assert (whole.throughput == parts.throughput).all()
+    with pytest.raises(ValueError):
+        evaluate_batch(ba, P, backend=backend, chunk=0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_annealer_throughput_mode_feasible_and_never_below_seed_proxy(backend):
+    # Shuffle-grouped topology: the annealer's uniform-split carried state
+    # and the locality-aware evaluator coincide, so the hill-climb
+    # guarantee (proxy never drops below the seed's) is exact.
+    topology, cluster, assignment, ba, tm = tp_case(lambda: T.linear(True))
+    greedy_row = ba.encode(dict(assignment.placements))
+    P0 = np.tile(greedy_row, (6, 1))
+    P = BatchAnnealer(ba, backend=backend).run(
+        P0, steps=150, seed=4, objective="throughput", tm=tm
+    )
+    result = evaluate_batch(ba, P, backend=backend, throughput_model=tm)
+    assert (result.violation == 0.0).all()
+    seed_tp = throughput_batch(ba, tm, greedy_row, backend=backend)[0]
+    assert (result.throughput >= seed_tp).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_annealer_throughput_mode_stays_feasible_on_local_groupings(backend):
+    topology, cluster, assignment, ba, tm = tp_case()  # pageload: local_or_shuffle
+    P0 = np.tile(ba.encode(dict(assignment.placements)), (6, 1))
+    P = BatchAnnealer(ba, backend=backend).run(
+        P0, steps=150, seed=4, objective="throughput", tm=tm
+    )
+    result = evaluate_batch(ba, P, backend=backend, throughput_model=tm)
+    assert (result.violation == 0.0).all()
+    assert (result.dead == 0).all()
+
+
+def test_annealer_throughput_mode_requires_model():
+    *_, ba, tm = tp_case()
+    with pytest.raises(ValueError):
+        BatchAnnealer(ba).run(np.zeros((1, ba.n_tasks), dtype=np.intp), 10, 0,
+                              objective="throughput")
+    with pytest.raises(ValueError):
+        BatchAnnealer(ba).run(np.zeros((1, ba.n_tasks), dtype=np.intp), 10, 0,
+                              objective="latency")
+
+
+@pytest.mark.skipif(not HAS_JAX, reason="jax not installed")
+@pytest.mark.parametrize(
+    "maker", [T.pageload, T.processing, lambda: T.diamond(True)]
+)
+def test_annealer_throughput_mode_backends_golden_equal(maker):
+    topology, cluster, assignment, ba, tm = tp_case(maker)
+    P0 = random_batch(ba, 10, seed=11)
+    P0[0] = ba.encode(dict(assignment.placements))
+    a = BatchAnnealer(ba, backend="numpy").run(
+        P0, steps=250, seed=13, objective="throughput", tm=tm
+    )
+    b = BatchAnnealer(ba, backend="jax").run(
+        P0, steps=250, seed=13, objective="throughput", tm=tm
+    )
+    assert (a == b).all()
+
+
+@pytest.mark.parametrize(
+    "maker",
+    [
+        lambda: T.linear(True),
+        lambda: T.linear(False),
+        lambda: T.star(False),
+        T.pageload,
+        T.processing,
+    ],
+)
+def test_search_throughput_objective_never_worse_in_simulated_sink_tp(maker):
+    """The acceptance guarantee, measured where §6 measures: simulated sink
+    throughput of the chosen placement vs the greedy R-Storm seed."""
+    topology, cluster = maker(), emulab_cluster()
+    greedy = get_scheduler("rstorm").schedule(topology, cluster, commit=False)
+    cluster.reset()
+    s = get_scheduler(
+        "rstorm-search", n_chains=8, steps=150, seed=0, objective="throughput"
+    ).schedule(topology, cluster, commit=False)
+    cluster.reset()
+    sim = Simulator(cluster)
+    tp_s = sim.run(topology, s).sink_throughput
+    tp_g = sim.run(topology, greedy).sink_throughput
+    assert tp_s >= tp_g
+    assert s.hard_violations(topology, cluster) == []
+
+
+def test_search_throughput_objective_deterministic():
+    topology, cluster = T.pageload(), emulab_cluster()
+    kw = dict(n_chains=8, steps=120, seed=7, objective="throughput")
+    a = get_scheduler("rstorm-search", **kw).schedule(topology, cluster, commit=False)
+    cluster.reset()
+    b = get_scheduler("rstorm-search", **kw).schedule(topology, cluster, commit=False)
+    assert a.placements == b.placements
+
+
+def test_search_objective_kwarg_registry_validation():
+    assert validate_scheduler_kwargs(
+        "rstorm-search", {"objective": "throughput"}
+    ) == []
+    errs = validate_scheduler_kwargs("rstorm-search", {"objective": "latency"})
+    assert len(errs) == 1
+    with pytest.raises(TypeError):
+        get_scheduler("rstorm-search", objective="latency")
+
+
+# -- unassigned recovery (bugfix regression) ----------------------------------------
+def recovery_case():
+    """Near-full two-node cluster where greedy's spread (CPU distance term)
+    strands the big sink task, but a consolidated rearrangement frees the
+    memory it needs."""
+    t = Topology("recov")
+    prev = None
+    for k in range(3):
+        comp = Component(f"c{k}", is_spout=(k == 0), parallelism=1)
+        comp.set_memory_load(500.0).set_cpu_load(60.0)
+        t.add_component(comp)
+        if prev:
+            t.add_edge(prev, comp.id)
+        prev = comp.id
+    x = Component("x", parallelism=1)
+    x.set_memory_load(1100.0).set_cpu_load(10.0)
+    t.add_component(x)
+    t.add_edge(prev, "x")
+    cl = Cluster(
+        [NodeSpec(f"n{i}", "rack0", 100.0, 1500.0) for i in range(2)]
+    )
+    return t, cl
+
+
+def test_search_recovers_task_greedy_stranded():
+    """Regression: the search used to carry greedy's ``unassigned`` list
+    through unchanged even when the annealed winner freed the capacity."""
+    t, cl = recovery_case()
+    greedy = get_scheduler("rstorm").schedule(t, cl, commit=False)
+    assert greedy.unassigned == ["recov/x[0]"]  # the setup's premise
+    cl.reset()
+    s = get_scheduler(
+        "rstorm-search", n_chains=12, steps=400, seed=0, init="random"
+    ).schedule(t, cl, commit=False)
+    assert s.is_complete(t)
+    assert s.hard_violations(t, cl) == []
+
+
+def test_search_recovery_is_deterministic_and_respects_budget():
+    t, cl = recovery_case()
+    kw = dict(n_chains=12, steps=400, seed=0, init="random")
+    a = get_scheduler("rstorm-search", **kw).schedule(t, cl, commit=False)
+    cl.reset()
+    b = get_scheduler("rstorm-search", **kw).schedule(t, cl, commit=False)
+    assert a.placements == b.placements
+    assert a.unassigned == b.unassigned
 
 
 def test_scenario_replay_with_search_is_deterministic():

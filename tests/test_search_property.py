@@ -59,12 +59,14 @@ def test_property_search_never_worse_and_never_violates(
     s = get_scheduler(
         "rstorm-search", n_chains=6, steps=80, seed=seed
     ).schedule(t, cl, commit=False)
-    # Same task partition as greedy; never a higher network cost; never a
-    # hard-constraint violation.
-    assert set(s.placements) == set(greedy.placements)
-    assert sorted(s.unassigned) == sorted(greedy.unassigned)
-    assert s.network_cost(t, cl) <= greedy.network_cost(t, cl)
+    # At least greedy's task coverage (the recovery pass may place tasks
+    # greedy stranded, never the reverse); never a hard-constraint
+    # violation; and on the same task set, never a higher network cost.
+    assert set(greedy.placements) <= set(s.placements)
+    assert set(s.unassigned) <= set(greedy.unassigned)
     assert s.hard_violations(t, cl) == []
+    if set(s.placements) == set(greedy.placements):
+        assert s.network_cost(t, cl) <= greedy.network_cost(t, cl)
 
 
 @settings(max_examples=10, deadline=None)
