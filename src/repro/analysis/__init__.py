@@ -1,0 +1,34 @@
+"""repro-lint — static enforcement of the repo's determinism contracts.
+
+The scheduling/scoring stack promises bit-reproducible results: golden
+numpy/jax backend equality, deterministic scenario replays, and a CI
+quality-regression gate all depend on it.  Those contracts used to live in
+comments ("FMA-contraction-safe", "dyadic grid", "no exp in the hot loop")
+and after-the-fact golden tests; this package rejects determinism-breaking
+*code* before it ships.
+
+Entry points:
+
+* ``python -m repro.analysis.lint src benchmarks examples`` — CLI;
+* :func:`repro.analysis.lint.lint_paths` — programmatic API;
+* ``tests/test_analysis_lint.py`` — tier-1 test pinning the tree clean.
+
+See :mod:`repro.analysis.zones` for which rules run where and
+:mod:`repro.analysis.rules` for what each rule rejects.  Deliberate
+violations are annotated in place with ``# repro-lint: allow(<rule>)``.
+"""
+
+from .rules import RULES, Violation  # noqa: F401
+from .zones import ZONES, rules_for_path, set_attrs_for_path  # noqa: F401
+
+_LINT_EXPORTS = ("lint_paths", "lint_source", "main")
+
+
+def __getattr__(name):
+    # Lazy so `python -m repro.analysis.lint` does not import .lint twice
+    # (runpy would warn about the module already being in sys.modules).
+    if name in _LINT_EXPORTS:
+        from . import lint
+
+        return getattr(lint, name)
+    raise AttributeError(name)

@@ -1,0 +1,183 @@
+"""repro-lint engine + CLI.
+
+Usage::
+
+    python -m repro.analysis.lint src benchmarks examples
+    python -m repro.analysis.lint --list-rules
+    python -m repro.analysis.lint --show-suppressed src
+
+Walks the given files/directories, runs every zone-active rule
+(:mod:`.zones`) over each Python file, and prints one ``path:line:col:
+rule: message`` diagnostic per unsuppressed violation.  Exit status: 0
+clean, 1 violations found, 2 usage/parse trouble.
+
+Suppressions are in-place annotations::
+
+    t0 = time.perf_counter()  # repro-lint: allow(hot-loop) schedule_time_s
+
+``allow(rule-a, rule-b)`` lists rules; ``allow(*)`` suppresses everything on
+the line.  A suppression comment on its own line covers the next code line
+(intervening comment lines are skipped), so constructs can be annotated
+above with a multi-line justification.  Everything after the closing paren
+is the justification — it is required reading for reviewers, not for the
+tool.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Set, Tuple
+
+from .rules import RULES, RuleContext, Violation
+from .zones import rules_for_path, set_attrs_for_path, x64_exempt
+
+_ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow\(([^)]*)\)")
+
+
+def _collect_allows(source: str) -> Dict[int, Set[str]]:
+    """line number -> set of rule names allowed there (``*`` = all).
+
+    A comment-only allow covers the next non-comment line, so annotations
+    (and their multi-line justifications) can sit above the construct.
+    """
+    allows: Dict[int, Set[str]] = {}
+    lines = source.splitlines()
+    for i, line in enumerate(lines, start=1):
+        m = _ALLOW_RE.search(line)
+        if not m:
+            continue
+        names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+        allows.setdefault(i, set()).update(names)
+        if line.lstrip().startswith("#"):
+            j = i + 1
+            while j <= len(lines) and lines[j - 1].lstrip().startswith("#"):
+                j += 1
+            allows.setdefault(j, set()).update(names)
+    return allows
+
+
+def lint_source(
+    source: str, path: str, active_rules: Sequence[str] | None = None
+) -> Tuple[List[Violation], List[Violation]]:
+    """Lint one file's text; returns ``(violations, suppressed)``.
+
+    ``active_rules`` overrides the zone lookup (used by the rule fixtures);
+    by default the path decides which rules run — a file outside every zone
+    produces nothing.
+    """
+    rules = rules_for_path(path) if active_rules is None else tuple(active_rules)
+    if not rules:
+        return [], []
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        v = Violation(
+            path=path,
+            line=exc.lineno or 1,
+            col=exc.offset or 0,
+            rule="parse-error",
+            message=f"cannot parse: {exc.msg}",
+        )
+        return [v], []
+    ctx = RuleContext(
+        path=path,
+        set_attrs=set_attrs_for_path(path),
+        x64_exempt=x64_exempt(path),
+    )
+    found: List[Violation] = []
+    for name in rules:
+        found.extend(RULES[name](tree, ctx))
+    allows = _collect_allows(source)
+    kept: List[Violation] = []
+    suppressed: List[Violation] = []
+    for v in sorted(found):
+        allowed = allows.get(v.line, set())
+        (suppressed if (v.rule in allowed or "*" in allowed) else kept).append(v)
+    return kept, suppressed
+
+
+def _iter_py_files(paths: Iterable[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(
+                f
+                for f in sorted(path.rglob("*.py"))
+                if "__pycache__" not in f.parts
+            )
+        elif path.suffix == ".py":
+            out.append(path)
+        elif not path.exists():
+            raise FileNotFoundError(p)
+    return out
+
+
+def lint_paths(
+    paths: Iterable[str],
+) -> Tuple[List[Violation], List[Violation], int]:
+    """Lint files/trees; returns ``(violations, suppressed, files_in_zone)``."""
+    violations: List[Violation] = []
+    suppressed: List[Violation] = []
+    n_zone = 0
+    for f in _iter_py_files(paths):
+        rel = f.as_posix()
+        if not rules_for_path(rel):
+            continue
+        n_zone += 1
+        kept, supp = lint_source(f.read_text(encoding="utf-8"), rel)
+        violations.extend(kept)
+        suppressed.extend(supp)
+    return sorted(violations), sorted(suppressed), n_zone
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="determinism & jax-purity static analysis for this repo",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "benchmarks", "examples"],
+        help="files or directories to lint (default: src benchmarks examples)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print rule names and exit"
+    )
+    parser.add_argument(
+        "--show-suppressed", action="store_true",
+        help="also print violations silenced by repro-lint: allow(...)",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(name)
+        return 0
+
+    try:
+        violations, suppressed, n_zone = lint_paths(args.paths)
+    except FileNotFoundError as exc:
+        print(f"repro-lint: no such path: {exc}", file=sys.stderr)
+        return 2
+
+    for v in violations:
+        print(v.render())
+    if args.show_suppressed:
+        for v in suppressed:
+            print(f"{v.render()} [suppressed]")
+    print(
+        f"repro-lint: {len(violations)} violation(s), "
+        f"{len(suppressed)} suppressed, {n_zone} file(s) in zones",
+        file=sys.stderr,
+    )
+    if any(v.rule == "parse-error" for v in violations):
+        return 2
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

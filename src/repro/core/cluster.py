@@ -152,8 +152,10 @@ class Cluster:
         cap = self.total_capacity()
         for rid in self.racks:
             avail = self.rack_available(rid)
+            # Sorted dims: the accumulation order of this float sum feeds
+            # Ref-Node choice, so it must not depend on PYTHONHASHSEED.
             totals[rid] = sum(
-                avail[d] / cap[d] for d in avail.dims if cap[d] > 0
+                avail[d] / cap[d] for d in sorted(avail.dims) if cap[d] > 0
             )
         # Deterministic tie-break by rack id.
         return max(sorted(totals), key=lambda r: totals[r])
@@ -164,7 +166,9 @@ class Cluster:
 
         def score(nid: str) -> float:
             avail = self.nodes[nid].available
-            return sum(avail[d] / cap[d] for d in avail.dims if cap[d] > 0)
+            return sum(
+                avail[d] / cap[d] for d in sorted(avail.dims) if cap[d] > 0
+            )
 
         live = [nid for nid in self.racks[rack_id] if self.nodes[nid].alive]
         if not live:

@@ -55,7 +55,9 @@ class ResourceVector:
 
     # -- arithmetic ----------------------------------------------------------
     def _merge(self, other: "ResourceVector", op) -> "ResourceVector":
-        dims = set(self.values) | set(other.values)
+        # Sorted so the result dict's key order (and any downstream
+        # serialization/iteration) is independent of PYTHONHASHSEED.
+        dims = sorted(set(self.values) | set(other.values))
         return ResourceVector(
             {d: op(self[d], other[d]) for d in dims}, self.hard | other.hard
         )
@@ -84,14 +86,14 @@ class ResourceVector:
     def overload(self, demand: "ResourceVector") -> Dict[str, float]:
         """Per-dim amount by which ``demand`` exceeds availability (soft viol.)."""
         out = {}
-        for d in demand.dims:
+        for d in sorted(demand.dims):
             excess = demand[d] - self[d]
             if excess > 0:
                 out[d] = excess
         return out
 
     def total(self, dims: Iterable[str] | None = None) -> float:
-        dims = self.dims if dims is None else dims
+        dims = sorted(self.dims) if dims is None else dims
         return sum(self[d] for d in dims)
 
     def is_nonnegative(self) -> bool:
@@ -118,7 +120,10 @@ def weighted_distance(
     if weights:
         w.update(weights)
     acc = 0.0
-    for d in (demand.dims | avail.dims) - {BANDWIDTH}:
+    # Sorted accumulation order: float addition is not associative, so the
+    # hash-seeded set order would make the low bits run-dependent (and
+    # disagree with the arena path, which reduces over sorted dims).
+    for d in sorted((demand.dims | avail.dims) - {BANDWIDTH}):
         acc += w.get(d, 1.0) * (demand[d] - avail[d]) ** 2
     acc += w.get(BANDWIDTH, 1.0) * network_distance**2
     return math.sqrt(acc)

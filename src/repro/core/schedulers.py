@@ -151,7 +151,9 @@ class RStormScheduler(Scheduler):
                 )
             row, hard = rows[cid]
             credit_mask = None
-            for up in upstream_of.get(cid, ()):
+            # Sorted for replayability; OR-ing host masks is commutative, but
+            # the iteration must not depend on set hash order regardless.
+            for up in sorted(upstream_of.get(cid, ())):
                 if up in hosts:
                     credit_mask = (
                         hosts[up] if credit_mask is None else credit_mask | hosts[up]
@@ -270,7 +272,7 @@ class RStormPlusScheduler(RStormScheduler):
             d = topology.demand_of(task)
             # (b) credit: nodes hosting upstream peers get a discount.
             peers = set()
-            for up in upstream_of[task.component_id]:
+            for up in sorted(upstream_of[task.component_id]):
                 peers.update(placed_by_component.get(up, []))
             node = selector.select(d, credit_nodes=peers, credit=PEER_CREDIT)
             if node is None:

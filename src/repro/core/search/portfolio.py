@@ -158,6 +158,9 @@ class SearchScheduler(Scheduler):
     def schedule(
         self, topology: Topology, cluster: Cluster, *, commit: bool = True
     ) -> Assignment:
+        # repro-lint: allow(hot-loop) schedule_time_s is reporting metadata
+        # sampled once per schedule() call, outside the annealing loop;
+        # placements and objective values never depend on it.
         t0 = time.perf_counter()
         topology.validate()
         # Greedy R-Storm seed on a fresh arena; avail0 (the pre-placement

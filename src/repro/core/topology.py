@@ -193,7 +193,7 @@ class Topology:
             raise ValueError(f"topology {self.id!r} has no spout")
         # Reachability: every bolt reachable from some spout.
         seen = set(c.id for c in self.spouts)
-        frontier = list(seen)
+        frontier = sorted(seen)
         while frontier:
             nxt = []
             for cid in frontier:
