@@ -12,6 +12,15 @@ Five views:
   over greedy and wall-clock for the full ``rstorm-search`` schedule call;
 * ``search/sequential_*`` — the sequential ``SwapAnnealer`` at a comparable
   swap budget, pinning what batching buys over one-chain annealing;
+* ``search/score_*``      — amortized per-candidate cost of the *fused*
+  scoring call (netcost + violation + dead + throughput proxy in one
+  pass), per backend: numpy, jax-vmap, and the Pallas fused kernel
+  (interpret mode off-TPU — the smoke leg doubles as the kernel's CI
+  smoke row).  Timing-only derived keys: the three backends are
+  bit-identical by contract, so there is no quality metric to gate;
+* ``search/multiswap_*``  — the multi-swap annealer: k proposals fused
+  per ``lax.scan`` element, same final placements (``identical_to_k1``),
+  k× fewer scan launches;
 * ``search/fidelity_*``   — proxy fidelity: Spearman rank correlation of the
   throughput proxy against ``simulator.run`` sink throughput over a mixed
   candidate set (greedy + annealed under both objectives + random), per
@@ -29,7 +38,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import Assignment, BatchArena, Cluster, PlacementArena, get_scheduler
-from repro.core.search import resolve_backend
+from repro.core.search import HAS_JAX, resolve_backend
 from repro.core.search.anneal import BatchAnnealer
 from repro.core.search.objective import evaluate_batch
 from repro.core.search.throughput import compile_throughput, throughput_batch
@@ -200,6 +209,65 @@ def run(smoke: bool = False) -> list:
             f"feasible={int(result.feasible.sum())}",
         )
         rows.append(("eval", b, secs))
+
+    # Amortized per-candidate cost of the fused scoring call (every
+    # objective term, throughput included) per backend, at equal chunking.
+    # Timing-only derived keys by design: jax/pallas rows exist only on
+    # the jax leg, and the regression gate skips rows with no quality
+    # metrics, so the nojax CI leg stays green.
+    tm_flagship = compile_throughput(ba, topo, cluster)
+    score_b = 1024 if smoke else 10240
+    score_chunk = 1024
+    P = alive[rng.integers(0, alive.size, size=(score_b, ba.n_tasks))]
+    for be in ("numpy",) + (("jax", "pallas") if HAS_JAX else ()):
+        _, secs = timed(
+            lambda: evaluate_batch(
+                ba, P, backend=be, chunk=score_chunk,
+                throughput_model=tm_flagship,
+            ),
+            repeat=1 if smoke else 2,
+        )
+        extra = ""
+        if be == "pallas":
+            from repro.core.search.kernels import default_interpret
+
+            extra = f";interpret={default_interpret()}"
+        emit_csv_row(
+            f"search/score_{be}_b{score_b}_t{tasks}",
+            secs * 1e6,
+            f"us_per_cand={secs * 1e6 / score_b:.2f};"
+            f"cand_per_s={score_b / max(secs, 1e-9):.0f};backend={be}" + extra,
+        )
+        rows.append(("score", be, secs))
+
+    # Multi-swap annealing: k fused proposals per scan launch must walk a
+    # bit-identical chain (identical_to_k1, and netcost= is gated across
+    # legs — the numpy fallback walks the same chain by construction).
+    ms_steps = 64 if smoke else 1024
+    ms_chains = 8 if smoke else 32
+    P0 = np.tile(ba.encode(dict(seed_assignment.placements)), (ms_chains, 1))
+    ref = None
+    for k in (1, 8):
+        ann = BatchAnnealer(ba, backend=backend)
+        # Warm the scan compile cache first (the k-unrolled body traces in
+        # O(k)); the row measures the steady-state step rate that fused
+        # proposals exist to raise, not one-off trace time.
+        ann.run(P0, ms_steps, seed=0, multi_swap=k)
+        Pk, secs = timed(
+            lambda: ann.run(P0, ms_steps, seed=0, multi_swap=k), repeat=1
+        )
+        if ref is None:
+            ref = Pk
+        net = float(evaluate_batch(ba, Pk, backend=backend).net.min())
+        launches = ms_steps // k + ms_steps % k
+        emit_csv_row(
+            f"search/multiswap_k{k}_s{ms_steps}_t{tasks}",
+            secs * 1e6,
+            f"netcost={net};scan_launches={launches};"
+            f"swaps_per_s={ms_steps * ms_chains / max(secs, 1e-9):.0f};"
+            f"identical_to_k1={bool(np.array_equal(ref, Pk))};backend={backend}",
+        )
+        rows.append(("multiswap", k, net, secs))
 
     # chains × steps sweep of the full scheduler call.
     for n_chains, steps in SMOKE_SWEEP if smoke else SWEEP:

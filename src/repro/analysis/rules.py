@@ -58,6 +58,30 @@ Rule inventory
     correctly rounded, platform-varying), and wall-clock reads inside the
     engine/search step paths.  The annealer's accept decisions must compare
     exact quantities, bit-identical across backends and platforms.
+
+``pallas-interpret``
+    ``interpret=True`` hardcoded at a call site in the kernel zone.  The
+    interpreter is the golden-oracle *test* harness; committed call sites
+    must plumb the flag (``default_interpret()`` / a parameter) so the
+    compiled kernel actually runs on TPU.
+
+``pallas-accum-order``
+    Augmented assignment onto a ``Ref`` slot whose statement depends on
+    ``pl.program_id`` — cross-program float accumulation order is a grid
+    execution detail, not IEEE semantics.  Kernels must accumulate into
+    their own output block (or carry exact grid-quantized values, where
+    order provably cannot matter).
+
+``pallas-accum-dtype``
+    ``zeros``/``ones``/``empty``/``full`` accumulator constructors in the
+    golden-oracle kernel zone without an explicit wide dtype.  ``jnp``
+    defaults to float32 outside an x64 scope, silently breaking the
+    bit-equality contract with the float64 oracles.
+
+``pallas-grid-truncate``
+    ``pallas_call`` grids computed with floor division (``B // block``) —
+    a batch that is not a block multiple silently drops its tail.  Use
+    ``pl.cdiv`` with host-side padding (and slice the outputs) instead.
 """
 
 from __future__ import annotations
@@ -734,4 +758,189 @@ def _check_hot_loop(tree: ast.AST, ctx: RuleContext) -> List[Violation]:
                     "make replays timing-dependent",
                 )
             )
+    return out
+
+
+# --------------------------------------------------------------------------
+# pallas-interpret / pallas-accum-order / pallas-accum-dtype /
+# pallas-grid-truncate
+# --------------------------------------------------------------------------
+
+
+@_rule("pallas-interpret")
+def _check_pallas_interpret(tree: ast.AST, ctx: RuleContext) -> List[Violation]:
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (
+                kw.arg == "interpret"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+            ):
+                out.append(
+                    _v(
+                        ctx, node, "pallas-interpret",
+                        "`interpret=True` hardcoded at a committed call site "
+                        "— the interpreter is the golden-oracle test path; "
+                        "plumb the flag (default_interpret() / a parameter) "
+                        "so the compiled kernel runs on TPU",
+                    )
+                )
+    return out
+
+
+def _is_program_id_call(node: ast.AST) -> bool:
+    if isinstance(node, ast.Call):
+        dotted = _dotted(node.func)
+        return bool(dotted) and dotted.split(".")[-1] == "program_id"
+    return False
+
+
+def _program_id_names(tree: ast.AST) -> Set[str]:
+    """Names bound (directly or via arithmetic) to a pl.program_id result."""
+    names: Set[str] = set()
+    changed = True
+
+    def tainted(expr: ast.AST) -> bool:
+        return any(
+            _is_program_id_call(sub)
+            or (isinstance(sub, ast.Name) and sub.id in names)
+            for sub in ast.walk(expr)
+        )
+
+    while changed:  # tiny fixpoint: `i = pl.program_id(0)`, `row = i * blk`
+        changed = False
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign) and tainted(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id not in names:
+                        names.add(t.id)
+                        changed = True
+    return names
+
+
+@_rule("pallas-accum-order")
+def _check_pallas_accum_order(
+    tree: ast.AST, ctx: RuleContext
+) -> List[Violation]:
+    out: List[Violation] = []
+    names = _program_id_names(tree)
+    for node in ast.walk(tree):
+        if not (
+            isinstance(node, ast.AugAssign)
+            and isinstance(node.target, ast.Subscript)
+        ):
+            continue
+        if any(
+            _is_program_id_call(sub)
+            or (isinstance(sub, ast.Name) and sub.id in names)
+            for sub in ast.walk(node)
+        ):
+            out.append(
+                _v(
+                    ctx, node, "pallas-accum-order",
+                    "accumulation depends on pl.program_id — cross-program "
+                    "float accumulation order is a grid execution detail; "
+                    "accumulate into the program's own output block, or "
+                    "carry exact grid-quantized values",
+                )
+            )
+    return out
+
+
+#: Accumulator constructors whose positional dtype slot varies.
+_ACCUM_CTORS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2}
+#: Wide dtypes the exactness contract allows accumulating in.
+_WIDE_DTYPES = {"float64", "int32", "int64", "bool_", "bool", "intp", "uint32"}
+
+
+def _dtype_name(node: ast.AST) -> Optional[str]:
+    """'float64' for `np.float64` / `jnp.float64` / 'float64', else None."""
+    if isinstance(node, ast.Attribute):
+        dotted = _dotted(node)
+        if dotted and dotted.split(".")[0] in ("np", "numpy", "jnp", "jax"):
+            return dotted.split(".")[-1]
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+@_rule("pallas-accum-dtype")
+def _check_pallas_accum_dtype(
+    tree: ast.AST, ctx: RuleContext
+) -> List[Violation]:
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None:
+            continue
+        parts = dotted.split(".")
+        if len(parts) != 2 or parts[0] not in ("np", "numpy", "jnp"):
+            continue
+        if parts[1] not in _ACCUM_CTORS:
+            continue
+        dtype_node = None
+        for kw in node.keywords:
+            if kw.arg == "dtype":
+                dtype_node = kw.value
+        if dtype_node is None:
+            slot = _ACCUM_CTORS[parts[1]]
+            if len(node.args) > slot:
+                dtype_node = node.args[slot]
+        if dtype_node is None:
+            out.append(
+                _v(
+                    ctx, node, "pallas-accum-dtype",
+                    f"`{dotted}` without an explicit dtype in the "
+                    "golden-oracle kernel zone — jnp defaults to float32 "
+                    "outside an x64 scope; pin dtype=jnp.float64 (or an "
+                    "exact integer dtype)",
+                )
+            )
+            continue
+        name = _dtype_name(dtype_node)
+        if name is not None and name not in _WIDE_DTYPES:
+            out.append(
+                _v(
+                    ctx, node, "pallas-accum-dtype",
+                    f"`{dotted}` accumulator pinned to `{name}` — the "
+                    "golden-oracle comparison contract is float64/exact-int "
+                    "only",
+                )
+            )
+    return out
+
+
+@_rule("pallas-grid-truncate")
+def _check_pallas_grid_truncate(
+    tree: ast.AST, ctx: RuleContext
+) -> List[Violation]:
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted is None or dotted.split(".")[-1] != "pallas_call":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "grid":
+                continue
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.BinOp) and isinstance(
+                    sub.op, ast.FloorDiv
+                ):
+                    out.append(
+                        _v(
+                            ctx, sub, "pallas-grid-truncate",
+                            "floor division in a pallas_call grid silently "
+                            "drops the tail block when the batch is not a "
+                            "block multiple; use pl.cdiv and pad/mask the "
+                            "boundary",
+                        )
+                    )
     return out

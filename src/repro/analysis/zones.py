@@ -75,6 +75,30 @@ ZONES: Tuple[Zone, ...] = (
         rules=("unseeded-random", "iter-order", "jax-purity", "x64-scope"),
         set_attrs=SET_ATTRS,
     ),
+    # The Pallas kernel layer (accelerator kernels and the fused search
+    # scorer): no interpret=True left on at committed call sites, no
+    # program_id-dependent accumulation order, no silently-truncating
+    # grids.
+    Zone(
+        name="kernels",
+        anchors=("repro/kernels", "repro/core/search/kernels"),
+        rules=(
+            "pallas-interpret",
+            "pallas-accum-order",
+            "pallas-grid-truncate",
+        ),
+        set_attrs=SET_ATTRS,
+    ),
+    # The *search* kernels additionally carry the three-backend golden-
+    # equality contract (kernel == jax-vmap == numpy, bit-identical), so
+    # their accumulators must be float64/exact-int.  The float32 flash
+    # kernels under repro/kernels are deliberately outside this subzone.
+    Zone(
+        name="kernel-exactness",
+        anchors=("repro/core/search/kernels",),
+        rules=("pallas-accum-dtype",),
+        set_attrs=SET_ATTRS,
+    ),
 )
 
 

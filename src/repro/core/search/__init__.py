@@ -1,8 +1,10 @@
 # Batched placement-search subsystem: lifts the PlacementArena's dense
 # arrays into a BatchArena and evaluates thousands of candidate placements
-# in parallel (jax-vmapped when available, numpy fallback otherwise).
-# Two objectives: network cost (QM3DKP) and the simulator-derived
-# throughput proxy (what the paper's §6 actually measures).
+# in parallel (jax-vmapped when available, numpy fallback otherwise; the
+# "pallas" backend scores every objective term in one fused kernel — see
+# .kernels — with all three backends golden-equal).  Two objectives:
+# network cost (QM3DKP) and the simulator-derived throughput proxy (what
+# the paper's §6 actually measures).
 from .backend import HAS_JAX, resolve_backend
 from .batch import BatchArena
 from .objective import evaluate_batch

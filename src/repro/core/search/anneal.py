@@ -82,6 +82,7 @@ class BatchAnnealer:
         t0: float = DEFAULT_T0,
         objective: str = "netcost",
         tm: Optional[ThroughputModel] = None,
+        multi_swap: int = 1,
     ) -> np.ndarray:
         """Anneal every chain of ``P0`` (B, T) for ``steps`` proposals each;
         returns the final (B, T) batch (numpy, regardless of backend).
@@ -94,6 +95,15 @@ class BatchAnnealer:
         proxy unchanged (the min-bound plateaus often) — passes the netcost
         threshold test.  All comparisons are of exact float64 quantities
         (grid-quantized state), so both backends walk identical chains.
+
+        ``multi_swap=k`` fuses k pregenerated proposals into each
+        ``lax.scan`` element on the jax path: the same per-swap math is
+        applied sequentially inside one scan step (threshold-accept per
+        swap, within the block), so the chain — and the final placements —
+        are *bit-identical* to ``multi_swap=1`` while the scan runs k×
+        fewer steps (k× less per-step launch/carry overhead).  The numpy
+        fallback has no launch overhead and already walks the identical
+        chain, so ``multi_swap`` is a no-op there by construction.
         """
         if objective not in OBJECTIVES:
             raise ValueError(
@@ -101,6 +111,8 @@ class BatchAnnealer:
             )
         if objective == "throughput" and tm is None:
             raise ValueError("objective='throughput' requires a ThroughputModel")
+        if multi_swap < 1:
+            raise ValueError(f"multi_swap must be >= 1, got {multi_swap}")
         P0 = np.ascontiguousarray(np.atleast_2d(P0))
         n_chains, n_tasks = P0.shape
         if n_tasks != self.ba.n_tasks:
@@ -112,12 +124,16 @@ class BatchAnnealer:
         ii, jj = swap_proposals(n_tasks, steps, n_chains, seed)
         thresh = np.linspace(float(t0), 0.0, steps)
         used0 = self.ba.used(P0)
+        # "pallas" selects the fused evaluator in evaluate_batch/
+        # throughput_batch; the annealer's hot loop is the fused multi-swap
+        # scan either way, so it shares the jax path (bit-identical chains).
+        use_jax = self.backend in ("jax", "pallas")
         if objective == "throughput":
-            if self.backend == "jax":
-                return self._run_jax_tp(P0, used0, ii, jj, thresh, tm)
+            if use_jax:
+                return self._run_jax_tp(P0, used0, ii, jj, thresh, tm, multi_swap)
             return self._run_numpy_tp(P0, used0, ii, jj, thresh, tm)
-        if self.backend == "jax":
-            return self._run_jax(P0, used0, ii, jj, thresh)
+        if use_jax:
+            return self._run_jax(P0, used0, ii, jj, thresh, multi_swap)
         return self._run_numpy(P0, used0, ii, jj, thresh)
 
     # -- numpy fallback --------------------------------------------------------
@@ -231,55 +247,76 @@ class BatchAnnealer:
         return P
 
     # -- jax scan, throughput objective ----------------------------------------
-    def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm) -> np.ndarray:
+    def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm, k) -> np.ndarray:
         ba = self.ba
-        state0 = aggregates_numpy(ba, tm, P0.astype(np.intp))
+        state = aggregates_numpy(ba, tm, P0.astype(np.intp))
+        model_args = (
+            ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
+            tm.task_cpu, tm.task_mem, tm.cpu_cap, tm.mem_cap,
+            tm.nic_cap, tm.rack_cap, tm.adj_bytes, tm.adj_src,
+            tm.adj_comp, tm.adj_lat, tm.rack_of, tm.den_flow,
+            np.float64(tm.thrash_factor), np.float64(tm.source_bound),
+            np.float64(tm.sink_rate),
+        )
+        P, used = P0.astype(np.int32), used0
         with x64():
-            P = _jax_anneal_tp_fn(tm.ack)(
-                ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
-                tm.task_cpu, tm.task_mem, tm.cpu_cap, tm.mem_cap,
-                tm.nic_cap, tm.rack_cap, tm.adj_bytes, tm.adj_src,
-                tm.adj_comp, tm.adj_lat, tm.rack_of, tm.den_flow,
-                np.float64(tm.thrash_factor), np.float64(tm.source_bound),
-                np.float64(tm.sink_rate),
-                P0.astype(np.int32), used0, state0,
-                ii.astype(np.int32), jj.astype(np.int32), thresh,
-            )
+            for lo, hi, kk in _swap_blocks(ii.shape[0], k):
+                P, used, state = _jax_anneal_tp_fn(tm.ack, kk)(
+                    *model_args, P, used, state,
+                    _rows(ii, lo, hi, kk), _rows(jj, lo, hi, kk),
+                    thresh[lo:hi].reshape(-1, kk),
+                )
         return np.asarray(P).astype(np.intp)
 
     # -- jax scan --------------------------------------------------------------
-    def _run_jax(self, P0, used0, ii, jj, thresh) -> np.ndarray:
+    def _run_jax(self, P0, used0, ii, jj, thresh, k) -> np.ndarray:
+        ba = self.ba
+        P, used = P0.astype(np.int32), used0
         with x64():
-            P = _jax_anneal_fn()(
-                self.ba.net,
-                self.ba.avail,
-                self.ba.hard_demand,
-                self.ba.adj,
-                self.ba.adj_mask,
-                P0.astype(np.int32),
-                used0,
-                ii.astype(np.int32),
-                jj.astype(np.int32),
-                thresh,
-            )
+            for lo, hi, kk in _swap_blocks(ii.shape[0], k):
+                P, used = _jax_anneal_fn(kk)(
+                    ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
+                    P, used,
+                    _rows(ii, lo, hi, kk), _rows(jj, lo, hi, kk),
+                    thresh[lo:hi].reshape(-1, kk),
+                )
         return np.asarray(P).astype(np.intp)
 
 
+def _swap_blocks(steps: int, k: int):
+    """Split ``steps`` proposals into a main run of k-fused scan elements
+    plus a k=1 tail for the remainder — (lo, hi, k_eff) segments.  Only two
+    compiled variants per k ever exist (k and 1), and a k > steps simply
+    degrades to the tail."""
+    k = max(1, min(k, steps))
+    main = (steps // k) * k
+    if main:
+        yield 0, main, k
+    if steps > main:
+        yield main, steps, 1
+
+
+def _rows(a: np.ndarray, lo: int, hi: int, k: int) -> np.ndarray:
+    """(steps, B) int proposal rows → (outer, k, B) int32 scan elements."""
+    return a[lo:hi].astype(np.int32).reshape(-1, k, a.shape[1])
+
+
 @functools.lru_cache(maxsize=None)
-def _jax_anneal_fn():
-    """jit-compiled lax.scan over the pregenerated proposal rows — the same
-    per-step math as ``BatchAnnealer._run_numpy``, with scatter updates.
-    One cached callable serves every arena/batch size (jit re-specializes
-    on array shapes)."""
+def _jax_anneal_fn(k: int):
+    """jit-compiled lax.scan over k-fused proposal blocks — the same
+    per-swap math as ``BatchAnnealer._run_numpy``, with scatter updates.
+    Each scan element carries k proposals, applied sequentially (unrolled
+    at trace time), so the chain is bit-identical to k=1 while the scan —
+    and its per-step dispatch/carry overhead — shrinks k×.  Returns the
+    full carry so a tail call can chain.  One cached callable per k serves
+    every arena/batch size (jit re-specializes on array shapes)."""
     jax, jnp = jax_modules()
 
     @jax.jit
     def anneal(net, avail, hard_demand, adj, adj_mask, P0, used0, ii, jj, thresh):
         bidx = jnp.arange(P0.shape[0])
 
-        def step(carry, xs):
-            P, used = carry
-            i, j, th = xs
+        def swap(P, used, i, j, th):
             na, nb = P[bidx, i], P[bidx, j]
             ai, mi = adj[i], adj_mask[i]
             aj, mj = adj[j], adj_mask[j]
@@ -296,20 +333,32 @@ def _jax_anneal_fn():
             P = P.at[bidx, j].set(jnp.where(accept, na, nb))
             du = jnp.where(accept[:, None], dj - di, 0.0)
             used = used.at[bidx, na].add(du).at[bidx, nb].add(-du)
+            return P, used
+
+        def step(carry, xs):
+            P, used = carry
+            i, j, th = xs  # (k, B), (k, B), (k,)
+            for r in range(k):
+                P, used = swap(P, used, i[r], j[r], th[r])
             return (P, used), None
 
-        (P, _), _ = jax.lax.scan(step, (P0, used0), (ii, jj, thresh))
-        return P
+        (P, used), _ = jax.lax.scan(step, (P0, used0), (ii, jj, thresh))
+        return P, used
 
     return anneal
 
 
 @functools.lru_cache(maxsize=None)
-def _jax_anneal_tp_fn(ack):
+def _jax_anneal_tp_fn(ack, k: int):
     """jit-compiled lax.scan for the throughput objective — the same
-    per-step math as ``BatchAnnealer._run_numpy_tp`` (one cached callable
-    per topology structure: the AckPlan is the static key; every model
-    array is a traced argument so no constants are baked in)."""
+    per-swap math as ``BatchAnnealer._run_numpy_tp`` (one cached callable
+    per topology structure and fusion factor: the AckPlan and k are the
+    static keys; every model array is a traced argument so no constants
+    are baked in).  Like :func:`_jax_anneal_fn`, each scan element applies
+    k proposals sequentially and the full aggregate state is returned so
+    a tail call can chain: the proxy recomputed from the carried exact
+    (grid-quantized) aggregates at a chain boundary is bit-identical to
+    the carried value, so chains split across calls never diverge."""
     jax, jnp = jax_modules()
 
     @jax.jit
@@ -331,9 +380,8 @@ def _jax_anneal_tp_fn(ack):
             ack_lambda(an0, den_flow, ack, xp=jnp),
         ) * sink_rate
 
-        def step(carry, xs):
+        def swap(carry, i, j, th):
             P, used, cpu_load, mem_used, egress, ingress, rack_up, ack_num, tp = carry
-            i, j, th = xs
             na, nb = P[bidx, i], P[bidx, j]
             ai, mi = adj[i], adj_mask[i]
             aj, mj = adj[j], adj_mask[j]
@@ -375,7 +423,7 @@ def _jax_anneal_tp_fn(ack):
             du = jnp.where(accept[:, None], dj - di, 0.0)
             used = used.at[bidx, na].add(du).at[bidx, nb].add(-du)
             w = accept[:, None]
-            carry = (
+            return (
                 P,
                 used,
                 jnp.where(w, cl, cpu_load),
@@ -386,10 +434,15 @@ def _jax_anneal_tp_fn(ack):
                 jnp.where(w, an, ack_num),
                 jnp.where(accept, tp_new, tp),
             )
+
+        def step(carry, xs):
+            i, j, th = xs  # (k, B), (k, B), (k,)
+            for r in range(k):
+                carry = swap(carry, i[r], j[r], th[r])
             return carry, None
 
         carry0 = (P0, used0, cpu0, mem0, eg0, in0, rk0, an0, tp0)
-        (P, *_), _ = jax.lax.scan(step, carry0, (ii, jj, thresh))
-        return P
+        carry, _ = jax.lax.scan(step, carry0, (ii, jj, thresh))
+        return carry[0], carry[1], carry[2:8]
 
     return anneal

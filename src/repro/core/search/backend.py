@@ -12,14 +12,17 @@ from __future__ import annotations
 
 import contextlib
 import importlib.util
-from typing import Iterator
+from typing import Iterator, Tuple
 
 #: Availability is probed without importing: jax's ~1 s import cost must not
 #: tax every ``import repro.core`` (the search registers eagerly there); the
 #: actual module import is deferred to the first jax-backend call.
 HAS_JAX = importlib.util.find_spec("jax") is not None
 
-BACKENDS = ("auto", "jax", "numpy")
+#: ``pallas`` is the fused single-pass scoring kernel
+#: (:mod:`repro.core.search.kernels`) — jax-only, bit-identical to the
+#: ``jax``/``numpy`` oracle paths by the same dyadic-grid exactness argument.
+BACKENDS = ("auto", "jax", "numpy", "pallas")
 
 
 def resolve_backend(name: str = "auto") -> str:
@@ -28,12 +31,23 @@ def resolve_backend(name: str = "auto") -> str:
         raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
     if name == "auto":
         return "jax" if HAS_JAX else "numpy"
-    if name == "jax" and not HAS_JAX:
+    if name in ("jax", "pallas") and not HAS_JAX:
         raise RuntimeError(
-            "backend='jax' requested but jax is not importable; "
+            f"backend={name!r} requested but jax is not importable; "
             "install jax or use backend='numpy'/'auto'"
         )
     return name
+
+
+def chunk_ranges(n: int, chunk: int) -> Iterator[Tuple[int, int]]:
+    """Yield ``(lo, hi)`` slice bounds covering ``range(n)`` in ``chunk``
+    steps — the one chunking loop every evaluator backend shares, so the
+    "results independent of chunking" contract has a single implementation
+    (numpy, jax-vmap, and pallas paths all iterate these exact bounds)."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    for lo in range(0, n, chunk):
+        yield lo, min(lo + chunk, n)
 
 
 def jax_modules():

@@ -1,0 +1,11 @@
+# Pallas kernel layer for the batched placement search: one fused kernel
+# scoring a (B, T) candidate block for netcost, hard-capacity violation,
+# dead-node hits, and the throughput proxy in a single pass (the
+# backend="pallas" option of evaluate_batch/throughput_batch).  The
+# numpy and jax-vmap paths remain the bit-exact golden oracles; the
+# dyadic-grid quantization that makes their reductions exact makes this
+# kernel's float64 accumulation exact too, so all three backends are
+# golden-equal.
+from .fused_score import DEFAULT_BLOCK_B, default_interpret, fused_score
+
+__all__ = ["DEFAULT_BLOCK_B", "default_interpret", "fused_score"]

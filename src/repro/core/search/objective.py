@@ -28,7 +28,7 @@ import numpy as np
 # same constant the sequential annealer uses (re-exported for the search),
 # so accept thresholds mean the same thing in both engines.
 from ..engine.annealing import OVERLOAD_PENALTY
-from .backend import jax_modules, resolve_backend, x64
+from .backend import chunk_ranges, jax_modules, resolve_backend, x64
 from .batch import BatchArena
 
 
@@ -60,13 +60,13 @@ def _evaluate_numpy(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
     viol = np.zeros(B, dtype=np.float64)
     dead = np.zeros(B, dtype=np.int64)
     e0, e1 = ba.edges[:, 0], ba.edges[:, 1]
-    for lo in range(0, B, chunk):
-        p = P[lo : lo + chunk]
+    for lo, hi in chunk_ranges(B, chunk):
+        p = P[lo:hi]
         if e0.size:
-            net[lo : lo + chunk] = ba.net[p[:, e0], p[:, e1]].sum(axis=-1)
+            net[lo:hi] = ba.net[p[:, e0], p[:, e1]].sum(axis=-1)
         used = ba.used(p)
-        viol[lo : lo + chunk] = np.maximum(used - ba.avail, 0.0).sum(axis=(1, 2))
-        dead[lo : lo + chunk] = (~ba.alive[p]).sum(axis=-1)
+        viol[lo:hi] = np.maximum(used - ba.avail, 0.0).sum(axis=(1, 2))
+        dead[lo:hi] = (~ba.alive[p]).sum(axis=-1)
     return BatchEval(net=net, violation=viol, dead=dead)
 
 
@@ -101,15 +101,38 @@ def _evaluate_jax(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
         # Chunked like the numpy path: the (chunk, E) gather is the working
         # set, so a huge batch never materializes one (B, E) intermediate.
         # At most two compiled shapes per batch size (full chunk + tail).
-        for lo in range(0, B, chunk):
+        for lo, hi in chunk_ranges(B, chunk):
             n, v, d = fn(
                 ba.net, ba.avail, ba.hard_demand, ba.alive, ba.edges,
-                P[lo : lo + chunk],
+                P[lo:hi],
             )
-            net[lo : lo + chunk] = np.asarray(n, dtype=np.float64)
-            viol[lo : lo + chunk] = np.asarray(v, dtype=np.float64)
-            dead[lo : lo + chunk] = np.asarray(d, dtype=np.int64)
+            net[lo:hi] = np.asarray(n, dtype=np.float64)
+            viol[lo:hi] = np.asarray(v, dtype=np.float64)
+            dead[lo:hi] = np.asarray(d, dtype=np.int64)
     return BatchEval(net=net, violation=viol, dead=dead)
+
+
+def _evaluate_pallas(
+    ba: BatchArena, P: np.ndarray, chunk: int, throughput_model
+) -> BatchEval:
+    """One fused kernel launch per chunk: netcost + capacity + dead (+
+    throughput when a model is given) in a single pass over the block —
+    instead of the two separate reductions the jax/numpy paths run."""
+    from .kernels import fused_score  # jax-only import, deferred
+
+    B = P.shape[0]
+    net = np.zeros(B, dtype=np.float64)
+    viol = np.zeros(B, dtype=np.float64)
+    dead = np.zeros(B, dtype=np.int64)
+    tp = np.zeros(B, dtype=np.float64) if throughput_model is not None else None
+    for lo, hi in chunk_ranges(B, chunk):
+        n, v, d, t = fused_score(ba, P[lo:hi], tm=throughput_model)
+        net[lo:hi] = n
+        viol[lo:hi] = v
+        dead[lo:hi] = d
+        if tp is not None:
+            tp[lo:hi] = t
+    return BatchEval(net=net, violation=viol, dead=dead, throughput=tp)
 
 
 def evaluate_batch(
@@ -133,7 +156,12 @@ def evaluate_batch(
         )
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk}")
-    if resolve_backend(backend) == "jax":
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        # The fused kernel computes every term (throughput included) in one
+        # pass per chunk — no second throughput_batch sweep needed.
+        return _evaluate_pallas(ba, P, chunk, throughput_model)
+    if resolved == "jax":
         out = _evaluate_jax(ba, P, chunk)
     else:
         out = _evaluate_numpy(ba, P, chunk)

@@ -52,7 +52,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .backend import jax_modules, resolve_backend, x64
+from .backend import chunk_ranges, jax_modules, resolve_backend, x64
 from .batch import BatchArena
 
 _EPS = 1e-12
@@ -589,8 +589,21 @@ def _locality_chunk_numpy(ba: BatchArena, tm: ThroughputModel, P: np.ndarray):
 def _throughput_numpy(ba: BatchArena, tm: ThroughputModel, P: np.ndarray, chunk: int):
     B = P.shape[0]
     out = np.zeros(B, dtype=np.float64)
-    for lo in range(0, B, chunk):
-        out[lo : lo + chunk] = _locality_chunk_numpy(ba, tm, P[lo : lo + chunk])
+    for lo, hi in chunk_ranges(B, chunk):
+        out[lo:hi] = _locality_chunk_numpy(ba, tm, P[lo:hi])
+    return out
+
+
+def _throughput_pallas(ba: BatchArena, tm: ThroughputModel, P: np.ndarray, chunk: int):
+    """Proxy via the fused scoring kernel (netcost/capacity/dead ride along
+    in the same pass — the point of the fusion; callers that want all four
+    should go through ``evaluate_batch(backend="pallas")`` directly)."""
+    from .kernels import fused_score  # jax-only import, deferred
+
+    B = P.shape[0]
+    out = np.zeros(B, dtype=np.float64)
+    for lo, hi in chunk_ranges(B, chunk):
+        out[lo:hi] = fused_score(ba, P[lo:hi], tm=tm)[3]
     return out
 
 
@@ -654,10 +667,10 @@ def _throughput_jax(ba: BatchArena, tm: ThroughputModel, P: np.ndarray, chunk: i
         # Honor chunking on the jax path too: one (chunk, E) gather at a
         # time instead of a monolithic (B, E) one (same contract as
         # ``evaluate_batch``; at most two compiled shapes per batch size).
-        for lo in range(0, P.shape[0], chunk):
-            out[lo : lo + chunk] = np.asarray(
+        for lo, hi in chunk_ranges(P.shape[0], chunk):
+            out[lo:hi] = np.asarray(
                 fn(
-                    P[lo : lo + chunk], tm.task_cpu, tm.task_mem,
+                    P[lo:hi], tm.task_cpu, tm.task_mem,
                     tm.cpu_cap, tm.mem_cap, tm.nic_cap, tm.rack_cap,
                     ba.edges, tm.edge_bytes, tm.edge_comp, tm.edge_lat,
                     tm.den_flow, tm.rack_of,
@@ -684,6 +697,9 @@ def throughput_batch(
         raise ValueError(
             f"placement batch has {P.shape[1]} tasks, arena has {ba.n_tasks}"
         )
-    if resolve_backend(backend) == "jax":
+    resolved = resolve_backend(backend)
+    if resolved == "pallas":
+        return _throughput_pallas(ba, tm, P, chunk)
+    if resolved == "jax":
         return _throughput_jax(ba, tm, P, chunk)
     return _throughput_numpy(ba, tm, P, chunk)

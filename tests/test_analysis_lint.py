@@ -29,6 +29,8 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 CORE = "src/repro/core/fixture_mod.py"
 HOT = "src/repro/core/search/fixture_mod.py"
 HARNESS = "benchmarks/fixture_bench.py"
+KERNEL = "src/repro/kernels/fixture_kernel.py"  # accelerator kernels (f32 ok)
+SEARCH_KERNEL = "src/repro/core/search/kernels/fixture_kernel.py"
 OUTSIDE = "tools/fixture_tool.py"
 
 
@@ -51,9 +53,27 @@ def test_zone_rule_sets():
     core = set(rules_for_path(CORE))
     hot = set(rules_for_path(HOT))
     harness = set(rules_for_path(HARNESS))
+    kernel = set(rules_for_path(KERNEL))
+    skernel = set(rules_for_path(SEARCH_KERNEL))
     assert "iter-order" in core and "hot-loop" not in core
     assert {"hot-loop", "float32-literal", "iter-order"} <= hot
     assert "unseeded-random" in harness and "hot-loop" not in harness
+    # Accelerator kernels: pallas hygiene, but no exactness dtype pinning
+    # (the flash kernels are float32 by design) and no hot-loop zone.
+    assert {"pallas-interpret", "pallas-accum-order", "pallas-grid-truncate"} <= kernel
+    assert "pallas-accum-dtype" not in kernel
+    assert "float32-literal" not in kernel
+    # Search kernels: everything above PLUS the golden-oracle exactness
+    # contract (float64 accumulators) and the hot-loop/search-zone rules,
+    # because repro/core/search/kernels nests inside repro/core/search.
+    assert {
+        "pallas-interpret",
+        "pallas-accum-order",
+        "pallas-grid-truncate",
+        "pallas-accum-dtype",
+        "float32-literal",
+        "hot-loop",
+    } <= skernel
     assert rules_for_path(OUTSIDE) == ()
 
 
@@ -62,8 +82,12 @@ def test_outside_zone_is_never_linted():
 
 
 def test_all_registered_rules_are_reachable_from_some_zone():
-    reachable = set(rules_for_path(CORE)) | set(rules_for_path(HOT)) | set(
-        rules_for_path(HARNESS)
+    reachable = (
+        set(rules_for_path(CORE))
+        | set(rules_for_path(HOT))
+        | set(rules_for_path(HARNESS))
+        | set(rules_for_path(KERNEL))
+        | set(rules_for_path(SEARCH_KERNEL))
     )
     assert reachable == set(RULES)
 
@@ -372,6 +396,123 @@ def test_hot_loop_threshold_accepting_negative():
         return delta <= threshold  # exact comparison, no libm
     """
     assert rules_hit(src, HOT) == set()
+
+
+# --------------------------------------------------------------------------
+# pallas kernel zone: interpret / accum-order / accum-dtype / grid-truncate
+# --------------------------------------------------------------------------
+
+
+def test_pallas_interpret_positive_negative():
+    bad = """
+    import jax.experimental.pallas as pl
+
+    def run(x):
+        return pl.pallas_call(kernel, out_shape=x, interpret=True)(x)
+    """
+    good = """
+    import jax.experimental.pallas as pl
+
+    def run(x, interpret):
+        return pl.pallas_call(kernel, out_shape=x, interpret=interpret)(x)
+    """
+    assert rules_hit(bad, KERNEL) == {"pallas-interpret"}
+    assert rules_hit(good, KERNEL) == set()
+    # Wrapper call sites are covered too — forcing interpret on a helper
+    # that plumbs the flag is the same hazard.
+    wrapper = "def f(ba, P):\n    return fused_score(ba, P, interpret=True)\n"
+    assert rules_hit(wrapper, SEARCH_KERNEL) == {"pallas-interpret"}
+    # Outside the kernel zones the rule is not active (tests pin
+    # interpret=True deliberately — that is the golden-oracle harness).
+    assert rules_hit(bad, CORE) == set()
+
+
+def test_pallas_interpret_suppressed():
+    src = """
+    def run(x):
+        # repro-lint: allow(pallas-interpret) CI smoke leg has no TPU
+        return pl.pallas_call(kernel, out_shape=x, interpret=True)(x)
+    """
+    kept, suppressed = lint_source(textwrap.dedent(src), KERNEL)
+    assert kept == []
+    assert [v.rule for v in suppressed] == ["pallas-interpret"]
+
+
+def test_pallas_accum_order_positive_negative():
+    bad = """
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        o_ref[0] += x_ref[i]
+    """
+    good = """
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...].sum()
+    """
+    assert rules_hit(bad, KERNEL) == {"pallas-accum-order"}
+    assert rules_hit(good, KERNEL) == set()
+
+
+def test_pallas_accum_order_inline_program_id_and_suppression():
+    bad = "def kernel(x_ref, o_ref):\n    o_ref[pl.program_id(0)] += 1.0\n"
+    assert rules_hit(bad, KERNEL) == {"pallas-accum-order"}
+    ok = (
+        "def kernel(x_ref, o_ref):\n"
+        "    # repro-lint: allow(pallas-accum-order) grid-quantized exact adds\n"
+        "    o_ref[pl.program_id(0)] += 1.0\n"
+    )
+    kept, suppressed = lint_source(ok, KERNEL)
+    assert kept == [] and len(suppressed) == 1
+
+
+def test_pallas_accum_dtype_positive_negative():
+    bad = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    def kernel(x_ref, o_ref):
+        acc = jnp.zeros((8, 4))
+        out = np.zeros(8, dtype=np.float32)
+        return acc, out
+    """
+    good = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    def kernel(x_ref, o_ref):
+        acc = jnp.zeros((8, 4), dtype=jnp.float64)
+        idx = np.zeros(8, np.int32)
+        flags = np.full(8, False, dtype=np.bool_)
+        return acc, idx, flags
+    """
+    vs = violations_of(bad, SEARCH_KERNEL)
+    # missing dtype (jnp defaults to f32) + explicit f32; the f32 literal
+    # also trips the hot-loop zone's float32-literal rule on this path.
+    assert {v.rule for v in vs} >= {"pallas-accum-dtype"}
+    assert sum(v.rule == "pallas-accum-dtype" for v in vs) == 2
+    assert rules_hit(good, SEARCH_KERNEL) == set()
+    # The float32 flash kernels are outside the exactness subzone.
+    assert "pallas-accum-dtype" not in rules_hit(bad, KERNEL)
+
+
+def test_pallas_grid_truncate_positive_negative():
+    bad = """
+    import jax.experimental.pallas as pl
+
+    def run(x, B, blk):
+        return pl.pallas_call(kernel, grid=(B // blk,), out_shape=x)(x)
+    """
+    good = """
+    import jax.experimental.pallas as pl
+
+    def run(x, B, blk):
+        return pl.pallas_call(kernel, grid=(pl.cdiv(B, blk),), out_shape=x)(x)
+    """
+    assert rules_hit(bad, KERNEL) == {"pallas-grid-truncate"}
+    assert rules_hit(good, KERNEL) == set()
+    # Floor division elsewhere in a kernel file is fine — only a
+    # pallas_call grid silently drops work.
+    other = "def f(n, b):\n    return n // b\n"
+    assert rules_hit(other, KERNEL) == set()
 
 
 # --------------------------------------------------------------------------
