@@ -1,0 +1,78 @@
+"""DES fidelity + scale benchmark — the packet-level referee's scorecard.
+
+Fidelity rows: measured DES sink throughput vs the fixed-point solver's
+prediction on the §6 micros and the Yahoo pipelines (``sink_tp`` is a pure
+function of the fixed seed, so it is gated by the 20% regression check;
+``solver_tp``/``relerr_pct`` are context columns).  The scale row reports
+raw event-loop throughput (events simulated per wall-second), which is
+machine-dependent and deliberately not gated.
+"""
+
+from __future__ import annotations
+
+from repro.core import RStormScheduler, emulab_cluster
+from repro.stream import DesConfig, DesExecutor, Simulator, topologies
+
+from .common import emit_csv_row, timed
+
+#: (row name, topology factory, DES horizon seconds).
+FIDELITY_CASES = [
+    ("linear_net", lambda: topologies.linear(True), 0.25),
+    ("linear_cpu", lambda: topologies.linear(False), 0.5),
+    ("diamond_net", lambda: topologies.diamond(True), 0.25),
+    ("star_cpu", lambda: topologies.star(False), 0.5),
+    ("pageload", lambda: topologies.pageload(), 0.5),
+    ("processing", lambda: topologies.processing(), 0.5),
+]
+
+SMOKE_CASES = [
+    ("linear_cpu", lambda: topologies.linear(False), 0.2),
+    ("pageload", lambda: topologies.pageload(), 0.2),
+    ("processing", lambda: topologies.processing(), 0.2),
+]
+
+
+def _place(topo):
+    cl = emulab_cluster()
+    a = RStormScheduler().schedule(topo, cl, commit=False)
+    cl.reset()
+    return cl, a
+
+
+def run(smoke: bool = False) -> list:
+    rows = []
+    for name, maker, duration in SMOKE_CASES if smoke else FIDELITY_CASES:
+        topo = maker()
+        cl, a = _place(topo)
+        sol = Simulator(cl).run(topo, a)
+        ex = DesExecutor(cl, config=DesConfig(duration_s=duration))
+        rep, wall = timed(ex.run, topo, a, repeat=1)
+        relerr = (rep.sink_throughput / max(sol.sink_throughput, 1e-9) - 1.0) * 100.0
+        emit_csv_row(
+            f"des_fidelity/{name}",
+            wall * 1e6,
+            f"sink_tp={rep.sink_throughput:.1f}tuples/s;"
+            f"solver_tp={sol.sink_throughput:.1f};relerr={relerr:+.1f}%;"
+            f"p99_ms={rep.p99_latency_s * 1e3 if rep.p99_latency_s else 0.0:.2f};"
+            f"events={rep.events_processed}",
+        )
+        rows.append((name, rep, sol))
+    # Scale row: the busiest micro, reported as raw event throughput.
+    topo = topologies.star(True)
+    cl, a = _place(topo)
+    ex = DesExecutor(
+        cl, config=DesConfig(duration_s=0.05 if smoke else 0.2)
+    )
+    rep, wall = timed(ex.run, topo, a, repeat=1)
+    emit_csv_row(
+        "des_scale/star_net",
+        wall * 1e6,
+        f"events={rep.events_processed};"
+        f"events_per_s={rep.events_processed / max(wall, 1e-9):.0f}",
+    )
+    rows.append(("scale", rep, None))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -42,11 +42,14 @@ class Zone:
 
 
 ZONES: Tuple[Zone, ...] = (
-    # The scheduling core and the control-plane API: everything that decides
-    # placements or serializes results must be replay-deterministic.
+    # The scheduling core, the control-plane API, and the discrete-event
+    # executor: everything that decides placements, serializes results, or
+    # referees a placement's measured performance must be replay-
+    # deterministic (the DES's bit-identical-trace contract hangs on it:
+    # every random draw flows from one seeded Philox root).
     Zone(
         name="core",
-        anchors=("repro/core", "repro/api"),
+        anchors=("repro/core", "repro/api", "repro/stream/des"),
         rules=(
             "unseeded-random",
             "iter-order",

@@ -39,6 +39,7 @@ from .specs import (
     CLUSTER_PRESETS,
     ClusterSpec,
     ComponentSpec,
+    DesSettings,
     EdgeSpec,
     NodeEntry,
     RunSettings,
@@ -51,6 +52,7 @@ __all__ = [
     "CLUSTER_PRESETS",
     "ClusterSpec",
     "ComponentSpec",
+    "DesSettings",
     "EVENT_TYPES",
     "EdgeSpec",
     "KillEvent",

@@ -50,6 +50,12 @@ class SimSummary:
     latency_s: float
     machines_used: int
     avg_cpu_utilization: float
+    # Latency percentiles — the DES executor measures them per tuple; the
+    # steady-state solver has only a mean, so these stay None there (and are
+    # omitted from the dict form to keep solver plans byte-stable).
+    p50_latency_s: Optional[float] = None
+    p95_latency_s: Optional[float] = None
+    p99_latency_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -97,13 +103,18 @@ class SchedulingPlan:
             "machines_used": self.machines_used,
         }
         if self.sim is not None:
-            out["sim"] = {
+            sim = {
                 "sink_throughput": self.sim.sink_throughput,
                 "binding": self.sim.binding,
                 "latency_s": self.sim.latency_s,
                 "machines_used": self.sim.machines_used,
                 "avg_cpu_utilization": self.sim.avg_cpu_utilization,
             }
+            for key in ("p50_latency_s", "p95_latency_s", "p99_latency_s"):
+                v = getattr(self.sim, key, None)
+                if v is not None:
+                    sim[key] = v
+            out["sim"] = sim
         return out
 
     @classmethod
@@ -240,10 +251,35 @@ class Nimbus:
             cluster = self.state.cluster
         return topology, scheduler, cluster
 
-    def _simulate(self, topology: Topology, assignment: Assignment, cluster: Cluster):
+    def _simulate(
+        self,
+        topology: Topology,
+        assignment: Assignment,
+        cluster: Cluster,
+        settings=None,
+    ):
+        return self._engine(cluster, settings).run(topology, assignment)
+
+    def _engine(self, cluster: Cluster, settings=None):
+        """The referee a payload's settings ask for — the steady-state
+        fixed-point solver by default, the discrete-event tuple-level
+        executor when ``settings.sim_engine == "des"``.  Both read the same
+        mechanism knobs so one RunSettings pins one physical model."""
         from ..stream.simulator import Simulator  # local: stream imports api
 
-        return Simulator(cluster).run(topology, assignment)
+        if settings is None:
+            return Simulator(cluster)
+        knobs = dict(
+            thrash_factor=settings.thrash_factor,
+            ack_overhead_s=settings.ack_overhead_s,
+            tuple_timeout_s=settings.tuple_timeout_s,
+        )
+        if settings.sim_engine == "des":
+            from ..stream.des import DesExecutor
+
+            config = settings.des.to_config() if settings.des is not None else None
+            return DesExecutor(cluster, config=config, **knobs)
+        return Simulator(cluster, **knobs)
 
     # -- verbs -------------------------------------------------------------------
     def plan(self, payload: SchedulingPayload) -> SchedulingPlan:
@@ -252,7 +288,7 @@ class Nimbus:
         topology, scheduler, cluster = self._prepare(payload, persist=False)
         assignment = scheduler.schedule(topology, cluster, commit=False)
         sim = (
-            self._simulate(topology, assignment, cluster)
+            self._simulate(topology, assignment, cluster, payload.settings)
             if payload.settings.simulate
             else None
         )
@@ -289,7 +325,7 @@ class Nimbus:
             raise
         self.state.commit(topology, assignment)
         sim = (
-            self._simulate(topology, assignment, cluster)
+            self._simulate(topology, assignment, cluster, payload.settings)
             if payload.settings.simulate
             else None
         )
@@ -372,22 +408,74 @@ class Nimbus:
         self._weights = dict(weights) if weights is not None else None
 
     def simulate_all(
-        self, warm_start: Optional[Mapping[str, float]] = None
+        self,
+        warm_start: Optional[Mapping[str, float]] = None,
+        *,
+        engine: Optional[str] = None,
+        des=None,
+        settings=None,
     ) -> Dict[str, Any]:
-        """Joint steady-state simulation of every committed topology (§6.5).
+        """Joint simulation of every committed topology (§6.5).
+
+        The default referee is the steady-state fixed-point solver;
+        ``engine="des"`` runs the discrete-event tuple-level executor instead
+        and returns ``DesReport`` objects (measured sink throughput, latency
+        percentiles, queue traces).  ``des`` optionally carries a
+        ``specs.DesSettings``/``stream.des.DesConfig`` for that run;
+        ``settings`` a full ``RunSettings`` (engine/des arguments win when
+        both are given).
 
         ``warm_start`` maps topology_id -> previous spout rate λ, letting a
         scenario replay re-enter the solver near the old fixed point instead
-        of from scratch after each timeline event."""
-        from ..stream.simulator import Simulator
-
+        of from scratch after each timeline event (solver engine only — the
+        DES always runs its full packet-level horizon)."""
         if self.state is None or not self.state.topologies:
             return {}
         pairs = [
             (self.state.topologies[tid], self.state.assignments[tid])
             for tid in sorted(self.state.topologies)
         ]
-        return Simulator(self.state.cluster).run_many(pairs, warm_start=warm_start)
+        if engine is None and settings is not None:
+            engine = settings.sim_engine
+        if des is None and settings is not None:
+            des = settings.des
+        if engine not in (None, "solver", "des"):
+            raise ValueError(
+                f"engine must be 'solver' or 'des', got {engine!r}"
+            )
+        if engine == "des":
+            from ..stream.des import DesConfig, DesExecutor
+
+            config = des.to_config() if hasattr(des, "to_config") else des
+            if config is not None and not isinstance(config, DesConfig):
+                raise TypeError(
+                    "des must be a DesSettings or stream.des.DesConfig, "
+                    f"got {des!r}"
+                )
+            knobs = (
+                dict(
+                    thrash_factor=settings.thrash_factor,
+                    ack_overhead_s=settings.ack_overhead_s,
+                    tuple_timeout_s=settings.tuple_timeout_s,
+                )
+                if settings is not None
+                else {}
+            )
+            executor = DesExecutor(self.state.cluster, config=config, **knobs)
+            return executor.run_many(pairs)
+        from ..stream.simulator import Simulator
+
+        solver = (
+            Simulator(
+                self.state.cluster,
+                thrash_factor=settings.thrash_factor,
+                ack_overhead_s=settings.ack_overhead_s,
+                tuple_timeout_s=settings.tuple_timeout_s,
+            )
+            if settings is not None
+            else Simulator(self.state.cluster)
+        )
+        return solver.run_many(pairs, warm_start=warm_start)
 
     # -- event-sourced dispatch (the scenario timeline entry point) ----------------
     def apply(self, event: Any) -> Dict[str, Any]:

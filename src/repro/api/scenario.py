@@ -550,11 +550,27 @@ class ScenarioRunner:
     ``warm_start`` (default on) feeds each interval's solved spout rates into
     the next interval's solver — the incremental re-entry that makes long
     churn timelines cheap; turn it off to re-solve each interval cold.
+
+    ``engine`` selects the per-interval referee: the steady-state fixed-point
+    solver (default) or the discrete-event tuple-level executor
+    (``engine="des"``, optionally with a ``DesSettings``/``DesConfig`` in
+    ``des``).  DES intervals additionally carry latency percentiles in the
+    trace; warm starts don't apply (every interval is a full packet run).
     """
 
-    def __init__(self, spec: ScenarioSpec, warm_start: bool = True):
+    def __init__(
+        self,
+        spec: ScenarioSpec,
+        warm_start: bool = True,
+        engine: str = "solver",
+        des=None,
+    ):
+        if engine not in ("solver", "des"):
+            raise ValueError(f"engine must be 'solver' or 'des', got {engine!r}")
         self.spec = spec.validate()
         self.warm_start = warm_start
+        self.engine = engine
+        self.des = des
 
     def run(self) -> ScenarioTrace:
         nimbus = Nimbus(self.spec.cluster)
@@ -570,7 +586,11 @@ class ScenarioRunner:
                     f"applying {event.kind!r}: {type(e).__name__}: {e}",
                     step=step,
                 ) from e
-            sims = nimbus.simulate_all(warm_start=rates if self.warm_start else None)
+            sims = nimbus.simulate_all(
+                warm_start=rates if self.warm_start else None,
+                engine=self.engine,
+                des=self.des,
+            )
             rates = {tid: r.spout_rate for tid, r in sims.items()}
             trace.entries.append(
                 self._entry(step, event, outcome, nimbus, sims)
@@ -588,7 +608,7 @@ class ScenarioRunner:
             assignment = state.assignments[tid]
             res = sims.get(tid)
             if res is not None:
-                topo_metrics[tid] = {
+                metrics = {
                     "sink_throughput": res.sink_throughput,
                     "spout_rate": res.spout_rate,
                     "binding": res.binding,
@@ -596,6 +616,13 @@ class ScenarioRunner:
                     "machines_used": res.machines_used,
                     "thrashed_nodes": list(res.thrashed_nodes),
                 }
+                # DES reports carry measured latency percentiles; solver
+                # results don't, and solver traces stay byte-identical.
+                for key in ("p50_latency_s", "p95_latency_s", "p99_latency_s"):
+                    v = getattr(res, key, None)
+                    if v is not None:
+                        metrics[key] = v
+                topo_metrics[tid] = metrics
             net_cost[tid] = assignment.network_cost(topology, cluster, live_only=True)
             if assignment.unassigned:
                 unplaced[tid] = sorted(assignment.unassigned)
@@ -616,6 +643,11 @@ class ScenarioRunner:
         )
 
 
-def run_scenario(spec: ScenarioSpec, warm_start: bool = True) -> ScenarioTrace:
+def run_scenario(
+    spec: ScenarioSpec,
+    warm_start: bool = True,
+    engine: str = "solver",
+    des=None,
+) -> ScenarioTrace:
     """One-shot convenience: validate + replay a scenario."""
-    return ScenarioRunner(spec, warm_start=warm_start).run()
+    return ScenarioRunner(spec, warm_start=warm_start, engine=engine, des=des).run()

@@ -645,37 +645,225 @@ class SchedulerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class DesSettings:
+    """Serialized knobs of the discrete-event executor (``stream.des``).
+
+    Mirrors ``stream.des.DesConfig`` field for field (``to_config`` converts)
+    so a payload/scenario can pin a DES run — duration, arrival process,
+    queue bounds, seed — as data.
+    """
+
+    duration_s: float = 0.5
+    warmup_frac: float = 0.3
+    queue_capacity: int = 128
+    seed: int = 0
+    arrival: str = "uniform"
+    burst_factor: float = 8.0
+    burst_period_s: float = 0.25
+    bucket_s: float = 0.05
+    open_loop_rate: float = 5000.0
+    backpressure: str = "auto"
+    service: str = "exponential"
+
+    _FIELDS = (
+        "duration_s", "warmup_frac", "queue_capacity", "seed", "arrival",
+        "burst_factor", "burst_period_s", "bucket_s", "open_loop_rate",
+        "backpressure", "service",
+    )
+    _ARRIVALS = ("uniform", "poisson", "bursty")
+    _BACKPRESSURE = ("auto", "credit", "drop")
+    _SERVICE = ("exponential", "deterministic")
+
+    def validate(self, path: str = "settings.des") -> List[str]:
+        errors: List[str] = []
+        for name in ("duration_s", "burst_period_s", "bucket_s", "open_loop_rate"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+                errors.append(f"{path}.{name}: must be a positive number, got {v!r}")
+        if not isinstance(self.warmup_frac, (int, float)) or isinstance(
+            self.warmup_frac, bool
+        ) or not 0.0 <= self.warmup_frac < 1.0:
+            errors.append(
+                f"{path}.warmup_frac: must be in [0, 1), got {self.warmup_frac!r}"
+            )
+        if not isinstance(self.queue_capacity, int) or isinstance(
+            self.queue_capacity, bool
+        ) or self.queue_capacity < 1:
+            errors.append(
+                f"{path}.queue_capacity: must be an int >= 1, "
+                f"got {self.queue_capacity!r}"
+            )
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool) or (
+            self.seed < 0
+        ):
+            errors.append(f"{path}.seed: must be an int >= 0, got {self.seed!r}")
+        if not isinstance(self.burst_factor, (int, float)) or isinstance(
+            self.burst_factor, bool
+        ) or self.burst_factor < 1.0:
+            errors.append(
+                f"{path}.burst_factor: must be >= 1, got {self.burst_factor!r}"
+            )
+        for name, allowed in (
+            ("arrival", self._ARRIVALS),
+            ("backpressure", self._BACKPRESSURE),
+            ("service", self._SERVICE),
+        ):
+            v = getattr(self, name)
+            if v not in allowed:
+                errors.append(
+                    f"{path}.{name}: must be one of {list(allowed)}, got {v!r}"
+                )
+        return errors
+
+    def to_config(self):
+        """The engine-side ``stream.des.DesConfig`` this spec pins."""
+        from ..stream.des import DesConfig  # local: stream imports api lazily
+
+        return DesConfig(
+            duration_s=float(self.duration_s),
+            warmup_frac=float(self.warmup_frac),
+            queue_capacity=self.queue_capacity,
+            seed=self.seed,
+            arrival=self.arrival,
+            burst_factor=float(self.burst_factor),
+            burst_period_s=float(self.burst_period_s),
+            bucket_s=float(self.bucket_s),
+            open_loop_rate=float(self.open_loop_rate),
+            backpressure=self.backpressure,
+            service=self.service,
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {f: getattr(self, f) for f in self._FIELDS}
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "DesSettings":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            duration_s=_get(d, "duration_s", (float,), path, errors, default=0.5),
+            warmup_frac=_get(d, "warmup_frac", (float,), path, errors, default=0.3),
+            queue_capacity=_get(
+                d, "queue_capacity", (int,), path, errors, default=128
+            ),
+            seed=_get(d, "seed", (int,), path, errors, default=0),
+            arrival=_get(d, "arrival", (str,), path, errors, default="uniform"),
+            burst_factor=_get(
+                d, "burst_factor", (float,), path, errors, default=8.0
+            ),
+            burst_period_s=_get(
+                d, "burst_period_s", (float,), path, errors, default=0.25
+            ),
+            bucket_s=_get(d, "bucket_s", (float,), path, errors, default=0.05),
+            open_loop_rate=_get(
+                d, "open_loop_rate", (float,), path, errors, default=5000.0
+            ),
+            backpressure=_get(
+                d, "backpressure", (str,), path, errors, default="auto"
+            ),
+            service=_get(d, "service", (str,), path, errors, default="exponential"),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSettings:
     """Per-submission knobs.
 
     ``allow_partial`` — accept plans with unassigned tasks (False makes
     ``Nimbus.submit`` reject an incomplete plan before any mutation).
-    ``simulate`` — attach a steady-state throughput SimResult to the plan.
+    ``simulate`` — attach a simulation result to the plan.
+    ``sim_engine`` — which referee ``simulate`` uses: the steady-state
+    fixed-point solver ("solver") or the discrete-event tuple-level
+    executor ("des").
+    ``ack_overhead_s`` / ``thrash_factor`` / ``tuple_timeout_s`` — the
+    mechanism constants both referees read (defaults mirror
+    ``stream.simulator``'s module constants; a test pins the sync), so a
+    payload can pin Storm's acker round-trip, the memory-thrash penalty and
+    the message timeout as data instead of relying on hard-coded defaults.
+    ``des`` — optional ``DesSettings`` pinning the DES run itself.
+
+    Serialization is sparse: only non-default knobs are emitted, so
+    payloads written before a knob existed round-trip byte-identically.
     """
 
     allow_partial: bool = True
     simulate: bool = False
+    sim_engine: str = "solver"
+    ack_overhead_s: float = 5e-3   # stream.simulator.ACK_OVERHEAD_S
+    thrash_factor: float = 0.002   # stream.simulator.THRASH_FACTOR
+    tuple_timeout_s: float = 30.0  # stream.simulator.TUPLE_TIMEOUT_S
+    des: Optional[DesSettings] = None
 
-    _FIELDS = ("allow_partial", "simulate")
+    _FIELDS = (
+        "allow_partial", "simulate", "sim_engine", "ack_overhead_s",
+        "thrash_factor", "tuple_timeout_s", "des",
+    )
+    _ENGINES = ("solver", "des")
 
     def validate(self, path: str = "settings") -> List[str]:
         errors: List[str] = []
-        for name in self._FIELDS:
+        for name in ("allow_partial", "simulate"):
             v = getattr(self, name)
             if not isinstance(v, bool):
                 errors.append(f"{path}.{name}: must be a bool, got {v!r}")
+        if self.sim_engine not in self._ENGINES:
+            errors.append(
+                f"{path}.sim_engine: must be one of {list(self._ENGINES)}, "
+                f"got {self.sim_engine!r}"
+            )
+        for name in ("ack_overhead_s", "thrash_factor", "tuple_timeout_s"):
+            v = getattr(self, name)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+                errors.append(f"{path}.{name}: must be a positive number, got {v!r}")
+        if self.des is not None:
+            if isinstance(self.des, DesSettings):
+                errors.extend(self.des.validate(f"{path}.des"))
+            else:
+                errors.append(
+                    f"{path}.des: expected DesSettings or null, got {self.des!r}"
+                )
         return errors
 
     def to_dict(self) -> Dict[str, Any]:
-        return {"allow_partial": self.allow_partial, "simulate": self.simulate}
+        out: Dict[str, Any] = {
+            "allow_partial": self.allow_partial,
+            "simulate": self.simulate,
+        }
+        if self.sim_engine != "solver":
+            out["sim_engine"] = self.sim_engine
+        if self.ack_overhead_s != 5e-3:
+            out["ack_overhead_s"] = self.ack_overhead_s
+        if self.thrash_factor != 0.002:
+            out["thrash_factor"] = self.thrash_factor
+        if self.tuple_timeout_s != 30.0:
+            out["tuple_timeout_s"] = self.tuple_timeout_s
+        if self.des is not None:
+            out["des"] = self.des.to_dict()
+        return out
 
     @classmethod
     def from_dict(cls, d: Any, path: str, errors: List[str]) -> "RunSettings":
         d = dict(_require_mapping(d, path))
         _check_keys(d, path, cls._FIELDS, errors)
+        des = d.get("des")
         return cls(
             allow_partial=_get(d, "allow_partial", (bool,), path, errors, default=True),
             simulate=_get(d, "simulate", (bool,), path, errors, default=False),
+            sim_engine=_get(d, "sim_engine", (str,), path, errors, default="solver"),
+            ack_overhead_s=_get(
+                d, "ack_overhead_s", (float,), path, errors, default=5e-3
+            ),
+            thrash_factor=_get(
+                d, "thrash_factor", (float,), path, errors, default=0.002
+            ),
+            tuple_timeout_s=_get(
+                d, "tuple_timeout_s", (float,), path, errors, default=30.0
+            ),
+            des=(
+                DesSettings.from_dict(des, f"{path}.des", errors)
+                if des is not None
+                else None
+            ),
         )
 
 

@@ -10,6 +10,8 @@ from .network import NetworkModel, EMULAB_NETWORK
 from .simulator import SimResult, Simulator, simulate, simulate_payload
 from .metrics import StatisticServer
 from . import topologies
+from . import des
+from .des import DesConfig, DesExecutor, DesReport, run_des
 
 __all__ = [
     "TopologyBuilder",
@@ -21,4 +23,9 @@ __all__ = [
     "simulate_payload",
     "StatisticServer",
     "topologies",
+    "des",
+    "DesConfig",
+    "DesExecutor",
+    "DesReport",
+    "run_des",
 ]

@@ -1,0 +1,21 @@
+"""Discrete-event tuple-level executor — the packet-level second referee.
+
+See ``engine`` for the event model, ``config`` for the knobs, ``report``
+for what a run measures.
+"""
+
+from .config import ARRIVALS, BACKPRESSURE, SERVICE, DesConfig
+from .engine import DesExecutor, run_des
+from .estimator import WindowedRateEstimator
+from .report import DesReport
+
+__all__ = [
+    "ARRIVALS",
+    "BACKPRESSURE",
+    "SERVICE",
+    "DesConfig",
+    "DesExecutor",
+    "DesReport",
+    "WindowedRateEstimator",
+    "run_des",
+]

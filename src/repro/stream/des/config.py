@@ -1,0 +1,109 @@
+"""Run configuration for the discrete-event tuple-level executor.
+
+``DesConfig`` is the engine-side knob bundle (pure data, no imports from the
+control plane); the serialized/validated counterpart is
+``repro.api.specs.DesSettings``, which converts into this via
+``DesSettings.to_config()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+#: Arrival processes a spout stream can follow.  "uniform" is a deterministic
+#: metronome (matches the solver's fluid assumption most closely), "poisson"
+#: draws exponential gaps from the per-spout Philox stream, "bursty" is an
+#: on/off process with the *same mean rate* — during 1/burst_factor of every
+#: period the spout emits at burst_factor × rate, then goes silent.  Bursty
+#: is the scenario class the steady-state solver cannot represent: identical
+#: mean load, transient queue growth.
+ARRIVALS = ("uniform", "poisson", "bursty")
+
+#: Backpressure semantics for bounded input queues.  "credit": a producer
+#: reserves a destination slot before dispatching and freezes when none is
+#: available (Storm 1.x+ credit-style flow control — what acked topologies
+#: get).  "drop": tuples that arrive at a full queue are shed (unanchored
+#: topologies — mirrors the solver's load-shedding propagation).  "auto"
+#: picks per topology: credit when ``topology.acked``, drop otherwise.
+BACKPRESSURE = ("auto", "credit", "drop")
+
+#: Per-tuple service-time model.  "exponential" draws each node/link service
+#: from an exponential with the declared mean (``cpu_cost_per_tuple`` and
+#: the byte serialization time are *means*; the fixed-point solver's M/M/1
+#: sojourns and ``ser/(1-util)`` hop inflation assume exactly this), so the
+#: cross-validation compares the solver against its own traffic assumptions.
+#: "deterministic" uses the means verbatim — the D/D/1 limit, useful for
+#: exact closed-form agreement on single chains.
+SERVICE = ("exponential", "deterministic")
+
+
+@dataclasses.dataclass(frozen=True)
+class DesConfig:
+    """Knobs of one DES run (everything else comes from the placement)."""
+
+    #: Simulated wall-clock horizon, seconds.
+    duration_s: float = 0.5
+    #: Leading fraction of the horizon excluded from every measurement
+    #: (throughput, latency percentiles) while queues and the ack window
+    #: fill to steady state.
+    warmup_frac: float = 0.3
+    #: Bounded input-queue capacity per task, tuples.
+    queue_capacity: int = 128
+    #: Philox root seed; each spout task derives its own independent stream
+    #: from (seed, topology index, task index).
+    seed: int = 0
+    #: Arrival process, one of ``ARRIVALS``.
+    arrival: str = "uniform"
+    #: Bursty arrivals: rate multiplier during the on-phase (duty cycle is
+    #: 1/burst_factor so the mean rate is unchanged).
+    burst_factor: float = 8.0
+    #: Bursty arrivals: on/off period, seconds.
+    burst_period_s: float = 0.25
+    #: Windowed rate-estimator bucket width, seconds (also the queue-depth
+    #: sampling interval).
+    bucket_s: float = 0.05
+    #: Emission rate (tuples/s per spout task) for unanchored spouts with no
+    #: intrinsic ``max_rate_per_task`` — an open-loop source has to push at
+    #: *some* finite rate for a packet-level run to terminate.
+    open_loop_rate: float = 5000.0
+    #: Queue overflow semantics, one of ``BACKPRESSURE``.
+    backpressure: str = "auto"
+    #: Service-time model, one of ``SERVICE``.
+    service: str = "exponential"
+    #: Record every processed event as a (time, kind, label) triple —
+    #: the bit-identical-trace determinism contract is asserted on this.
+    trace_events: bool = False
+
+    def __post_init__(self):
+        if self.duration_s <= 0.0:
+            raise ValueError(f"duration_s must be > 0, got {self.duration_s!r}")
+        if not 0.0 <= self.warmup_frac < 1.0:
+            raise ValueError(
+                f"warmup_frac must be in [0, 1), got {self.warmup_frac!r}"
+            )
+        if self.queue_capacity < 1:
+            raise ValueError(
+                f"queue_capacity must be >= 1, got {self.queue_capacity!r}"
+            )
+        if self.arrival not in ARRIVALS:
+            raise ValueError(
+                f"arrival must be one of {ARRIVALS}, got {self.arrival!r}"
+            )
+        if self.backpressure not in BACKPRESSURE:
+            raise ValueError(
+                f"backpressure must be one of {BACKPRESSURE}, "
+                f"got {self.backpressure!r}"
+            )
+        if self.service not in SERVICE:
+            raise ValueError(
+                f"service must be one of {SERVICE}, got {self.service!r}"
+            )
+        if self.burst_factor < 1.0:
+            raise ValueError(
+                f"burst_factor must be >= 1, got {self.burst_factor!r}"
+            )
+        for name in ("burst_period_s", "bucket_s", "open_loop_rate"):
+            if getattr(self, name) <= 0.0:
+                raise ValueError(
+                    f"{name} must be > 0, got {getattr(self, name)!r}"
+                )

@@ -1,0 +1,742 @@
+"""Discrete-event, tuple-level executor — the packet-level second referee.
+
+The steady-state solver (``stream.simulator``) computes a fixed point of a
+fluid model; this module *executes* a committed placement tuple by tuple on
+a binary-heap event queue and reports what it measured.  Mechanisms:
+
+* **Event queue** — ``heapq`` of ``(time, seq, kind, payload)``; the
+  monotonically increasing ``seq`` breaks time ties deterministically, so a
+  fixed seed reproduces a bit-identical event trace.
+* **Nodes as CPU servers** — each node is a single FIFO server delivering
+  its effective CPU points/s (thrashed nodes: ``capacity × thrash_factor``,
+  the same static memory rule the solver applies); a tuple of a component
+  with cost ``c`` point-seconds occupies the node for ``c / points`` — the
+  aggregate throughput bound Σ rate×cost ≤ capacity is therefore *exactly*
+  the solver's per-node CPU bound.  Colocated tasks share the server
+  round-robin (work-conserving processor sharing).
+* **Network links** — a remote hop is a pipeline of FIFO byte-servers:
+  egress NIC → (rack uplink when crossing racks) → propagation latency from
+  the placement's rack distance (``NetworkModel.latency``) → ingress NIC.
+  Local hops pay only the intra/inter-process latency.
+* **Bounded queues + backpressure** — every task has a bounded input queue.
+  Acked topologies use credit-based flow control: a producer reserves a
+  destination slot at dispatch and freezes (its node serves other tasks)
+  until a slot frees.  Unanchored topologies shed at a full queue — the
+  packet-level analogue of the solver's load-shedding propagation.
+* **Ack credit loop + timeout replay** — each acked spout task holds a
+  sliding window of pending tuple trees; a tree completes when every copy
+  along the DAG is processed (Storm's acker XOR, modelled as an outstanding
+  counter), the ack returns after ``ack_overhead_s``, and a tree that is
+  still open after ``tuple_timeout_s`` fails and is replayed.  Arrival
+  randomness comes from one seeded Philox stream per spout task.
+
+Spout-window convention: the solver treats all pending across every spout
+component as one pool against a single λ (``pending()/L``).  The DES
+mirrors that referee convention — a spout task of component ``c`` gets a
+window of ``max_spout_pending × Σ parallelism / parallelism(c)`` so the two
+models agree by construction on multi-spout topologies.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ...core.assignment import Assignment
+from ...core.cluster import Cluster
+from ...core.topology import Topology
+from ..network import EMULAB_NETWORK, NetworkModel
+from ..simulator import (
+    ACK_OVERHEAD_S,
+    THRASH_FACTOR,
+    TUPLE_TIMEOUT_S,
+    _cpu_cost,
+    _topo_order,
+)
+from .config import DesConfig
+from .estimator import WindowedRateEstimator
+from .report import DesReport
+
+# Event kinds (heap payload discriminators; ints compare fast and stable).
+_GEN = 0       # spout pump wake-up (rate-driven arrivals)
+_NODE = 1      # node finished servicing a tuple
+_LINK = 2      # link finished serializing a payload
+_ADV = 3       # propagation-latency stage done, advance the route
+_ACK = 4       # completed tuple tree's ack reaches its spout
+_TIMEOUT = 5   # pending tuple tree expired
+_SAMPLE = 6    # periodic queue-depth sample
+
+_KIND_NAMES = ("gen", "node", "link", "adv", "ack", "timeout", "sample")
+
+
+class _Root:
+    """One spout tuple tree (Storm's 'root' tuple + everything anchored)."""
+
+    __slots__ = ("spout", "t_emit", "outstanding", "state")
+
+    def __init__(self, spout: "_Task", t_emit: float):
+        self.spout = spout
+        self.t_emit = t_emit
+        self.outstanding = 1  # the root job itself
+        self.state = 0        # 0 open, 1 acked, 2 failed (timed out)
+
+
+class _Edge:
+    """One outgoing component edge of one task (its routing targets)."""
+
+    __slots__ = ("dst", "nbytes", "rr")
+
+    def __init__(self, dst: List["_Task"], nbytes: float):
+        self.dst = dst
+        self.nbytes = nbytes
+        self.rr = 0
+
+
+class _Task:
+    __slots__ = (
+        "tid", "topo_i", "is_spout", "is_sink", "acked", "svc", "node",
+        "queue", "qcap", "qsize", "waiters", "blocked_out", "in_ring",
+        "carry", "emit_ratio", "edges",
+        "sp_window", "sp_pending", "sp_next", "sp_rate", "sp_rng",
+        "sp_gen_scheduled", "sp_pumping",
+    )
+
+    def __init__(self, tid: str, topo_i: int, node: "_Node", qcap: int):
+        self.tid = tid
+        self.topo_i = topo_i
+        self.is_spout = False
+        self.is_sink = False
+        self.acked = False
+        self.svc = 0.0
+        self.node = node
+        self.queue: deque = deque()
+        self.qcap = qcap
+        self.qsize = 0          # queued + slots reserved by in-flight tuples
+        self.waiters: deque = deque()
+        self.blocked_out = 0
+        self.in_ring = False
+        self.carry = 0.0
+        self.emit_ratio = 1.0
+        self.edges: List[_Edge] = []
+        self.sp_window = 0.0
+        self.sp_pending = 0
+        self.sp_next = 0.0
+        self.sp_rate: Optional[float] = None
+        self.sp_rng: Optional[np.random.Generator] = None
+        self.sp_gen_scheduled = False
+        self.sp_pumping = False
+
+
+class _Node:
+    __slots__ = ("nid", "speed", "busy", "ring", "busy_time")
+
+    def __init__(self, nid: str, speed: float):
+        self.nid = nid
+        self.speed = speed
+        self.busy = False
+        self.ring: deque = deque()
+        self.busy_time = 0.0
+
+
+class _Link:
+    __slots__ = ("name", "rate", "busy", "fifo")
+
+    def __init__(self, name: str, rate: float):
+        self.name = name
+        self.rate = rate
+        self.busy = False
+        self.fifo: deque = deque()
+
+
+class DesExecutor:
+    """Run committed placements under a stochastic tuple stream."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        network: NetworkModel = EMULAB_NETWORK,
+        config: Optional[DesConfig] = None,
+        *,
+        thrash_factor: float = THRASH_FACTOR,
+        ack_overhead_s: float = ACK_OVERHEAD_S,
+        tuple_timeout_s: float = TUPLE_TIMEOUT_S,
+    ):
+        self.cluster = cluster
+        self.network = network
+        self.config = config or DesConfig()
+        self.thrash_factor = thrash_factor
+        self.ack_overhead_s = ack_overhead_s
+        self.tuple_timeout_s = tuple_timeout_s
+
+    # -- public API -----------------------------------------------------------
+    def run(self, topology: Topology, assignment: Assignment) -> DesReport:
+        return self.run_many([(topology, assignment)])[topology.id]
+
+    def run_many(
+        self, scheduled: Sequence[Tuple[Topology, Assignment]]
+    ) -> Dict[str, DesReport]:
+        self._compile(scheduled)
+        self._loop()
+        return self._reports()
+
+    # -- compilation ----------------------------------------------------------
+    def _compile(self, scheduled) -> None:
+        cfg = self.config
+        self._scheduled = list(scheduled)
+        n = len(self._scheduled)
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self.trace: List[Tuple[float, str, str]] = []
+
+        # Static memory over-subscription → thrashed nodes (the solver rule).
+        mem: Dict[str, float] = {}
+        placements: List[Dict[str, str]] = []
+        for topo, asg in self._scheduled:
+            pl = {
+                tid: nid
+                for tid, nid in asg.placements.items()
+                if self.cluster.nodes[nid].alive
+            }
+            placements.append(pl)
+            for task in topo.all_tasks():
+                nid = pl.get(task.id)
+                if nid is not None:
+                    comp = topo.component_of(task)
+                    mem[nid] = mem.get(nid, 0.0) + comp.memory_load
+        self.thrashed = sorted(
+            nid
+            for nid, mb in mem.items()
+            if mb > self.cluster.nodes[nid].spec.memory_capacity_mb + 1e-9
+        )
+        thr = frozenset(self.thrashed)
+
+        self._nodes: Dict[str, _Node] = {}
+        for nid in sorted(self.cluster.nodes):
+            node = self.cluster.nodes[nid]
+            if not node.alive:
+                continue
+            cap = node.spec.cpu_capacity
+            eff = cap * self.thrash_factor if nid in thr else cap
+            self._nodes[nid] = _Node(nid, max(eff, 1e-9))
+        self._egress = {
+            nid: _Link(f"eg:{nid}", self.network.nic_bw)
+            for nid in sorted(self._nodes)
+        }
+        self._ingress = {
+            nid: _Link(f"in:{nid}", self.network.nic_bw)
+            for nid in sorted(self._nodes)
+        }
+        racks = sorted(
+            {self.cluster.nodes[nid].rack_id for nid in self._nodes}
+        )
+        self._rack_up = {
+            rid: _Link(f"up:{rid}", self.network.rack_uplink_bw)
+            for rid in racks
+        }
+        self._routes: Dict[Tuple[str, str], tuple] = {}
+        # One service-time stream for the whole run (draws happen in event
+        # order, which the heap makes deterministic); None in the D/D/1
+        # limit so the hot path can branch once.
+        self._svc_rng = (
+            np.random.Generator(np.random.Philox([cfg.seed, 0x5E21CE]))
+            if cfg.service == "exponential"
+            else None
+        )
+
+        # Per-topology task states, in deterministic (topo order × task
+        # index) order; dead/unplaced tasks carry no flow, as in the solver.
+        self._tasks: List[_Task] = []
+        self._topo_tasks: List[List[_Task]] = [[] for _ in range(n)]
+        self._spouts: List[_Task] = []
+        self._drop_mode: List[bool] = []
+        self._n_spout_comps: List[int] = []
+        lookup: Dict[str, _Task] = {}
+        gidx = 0
+        for ti, (topo, _) in enumerate(self._scheduled):
+            pl = placements[ti]
+            if cfg.backpressure == "auto":
+                self._drop_mode.append(not topo.acked)
+            else:
+                self._drop_mode.append(cfg.backpressure == "drop")
+            order = _topo_order(topo)
+            spout_par = 0
+            n_spout_comps = 0
+            for cid in order:
+                comp = topo.components[cid]
+                if comp.is_spout:
+                    spout_par += comp.parallelism
+                    n_spout_comps += 1
+            self._n_spout_comps.append(n_spout_comps)
+            # Joint pending pool spread per spout component (see module doc).
+            pool = float(topo.max_spout_pending) * spout_par
+            for cid in order:
+                comp = topo.components[cid]
+                cost = _cpu_cost(comp)
+                sink = not topo.downstream(cid)
+                for task in comp.tasks(topo.id):
+                    nid = pl.get(task.id)
+                    if nid is None:
+                        continue
+                    nd = self._nodes[nid]
+                    st = _Task(task.id, ti, nd, cfg.queue_capacity)
+                    st.is_spout = comp.is_spout
+                    st.is_sink = sink
+                    st.acked = topo.acked
+                    st.emit_ratio = comp.emit_ratio
+                    st.svc = cost / nd.speed
+                    if not comp.is_spout and comp.max_rate_per_task is not None:
+                        # Intrinsic per-task ceiling on a bolt: the service
+                        # time cannot beat 1/max_rate no matter the node.
+                        st.svc = max(st.svc, 1.0 / comp.max_rate_per_task)
+                    if comp.is_spout:
+                        st.sp_window = pool / comp.parallelism
+                        st.sp_rate = comp.max_rate_per_task
+                        if st.sp_rate is None and not topo.acked:
+                            st.sp_rate = cfg.open_loop_rate
+                        st.sp_rng = np.random.Generator(
+                            np.random.Philox([cfg.seed, ti, gidx])
+                        )
+                        self._spouts.append(st)
+                    lookup[task.id] = st
+                    self._tasks.append(st)
+                    self._topo_tasks[ti].append(st)
+                    gidx += 1
+            # Routing targets per source task (local_or_shuffle mirrors the
+            # solver: colocated destinations when any exist, else all).
+            for cid in order:
+                comp = topo.components[cid]
+                for task in comp.tasks(topo.id):
+                    st = lookup.get(task.id)
+                    if st is None:
+                        continue
+                    for dst_cid in topo.downstream(cid):
+                        grouping = topo.groupings.get((cid, dst_cid), "shuffle")
+                        dsts = [
+                            lookup[t.id]
+                            for t in topo.components[dst_cid].tasks(topo.id)
+                            if t.id in lookup
+                        ]
+                        if not dsts:
+                            continue
+                        if grouping == "local_or_shuffle":
+                            local = [d for d in dsts if d.node is st.node]
+                            dsts = local or dsts
+                        st.edges.append(_Edge(dsts, comp.tuple_bytes))
+
+        # Per-topology counters & traces.
+        self._emitted = [0] * n
+        self._emitted_meas = [0] * n
+        self._acked = [0] * n
+        self._failed = [0] * n
+        self._replayed = [0] * n
+        self._open_roots = [0] * n
+        self._created = [0] * n
+        self._processed = [0] * n
+        self._dropped = [0] * n
+        self._lat: List[List[float]] = [[] for _ in range(n)]
+        self._sink_est = [
+            WindowedRateEstimator(cfg.duration_s, cfg.bucket_s)
+            for _ in range(n)
+        ]
+        self._qd_trace: List[List[int]] = [[] for _ in range(n)]
+        self._qd_max = [0] * n
+        self.events_processed = 0
+        self._t_end = cfg.duration_s
+        # Align the measurement window start to a bucket boundary so the
+        # windowed estimator and the exact counters cover the same span.
+        warm = cfg.duration_s * cfg.warmup_frac
+        self._warm = math.ceil(warm / cfg.bucket_s - 1e-9) * cfg.bucket_s
+
+    # -- event loop -----------------------------------------------------------
+    def _push(self, t: float, kind: int, payload) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _loop(self) -> None:
+        cfg = self.config
+        for st in self._spouts:
+            self._pump(st, 0.0)
+        if cfg.bucket_s <= self._t_end:
+            self._push(cfg.bucket_s, _SAMPLE, None)
+        heap = self._heap
+        while heap and heap[0][0] <= self._t_end:
+            t, _, kind, payload = heapq.heappop(heap)
+            self.events_processed += 1
+            if kind == _NODE:
+                self._on_node_done(t, payload)
+            elif kind == _LINK:
+                self._on_link_done(t, payload)
+            elif kind == _ADV:
+                self._advance(t, *payload)
+            elif kind == _ACK:
+                self._on_ack(t, payload)
+            elif kind == _GEN:
+                payload.sp_gen_scheduled = False
+                self._pump(payload, t)
+            elif kind == _TIMEOUT:
+                self._on_timeout(t, payload)
+            else:
+                self._on_sample(t)
+            if cfg.trace_events:
+                self.trace.append((t, _KIND_NAMES[kind], self._label(kind, payload)))
+
+    @staticmethod
+    def _label(kind: int, payload) -> str:
+        if kind == _NODE:
+            return payload[1].tid
+        if kind == _LINK:
+            return payload[0].name
+        if kind == _ADV:
+            return payload[3].tid
+        if kind in (_ACK, _TIMEOUT):
+            return payload.spout.tid
+        if kind == _GEN:
+            return payload.tid
+        return ""
+
+    # -- spout generation -----------------------------------------------------
+    def _pump(self, st: _Task, t: float) -> None:
+        if st.sp_pumping:
+            return  # a _generate side effect re-entered (queue drained)
+        st.sp_pumping = True
+        try:
+            while True:
+                if st.sp_rate is not None and st.sp_next > t + 1e-15:
+                    if st.sp_next <= self._t_end and not st.sp_gen_scheduled:
+                        st.sp_gen_scheduled = True
+                        self._push(st.sp_next, _GEN, st)
+                    return
+                if st.acked and st.sp_pending >= st.sp_window:
+                    return  # resumed by the next ack/timeout
+                if st.qsize >= st.qcap:
+                    return  # resumed when the spout's own queue drains
+                if st.sp_rate is not None:
+                    # The rate is a ceiling, not a schedule: no burst of
+                    # catch-up emissions after a blocked stretch.  Advance
+                    # *before* generating — the enqueue's side effects can
+                    # consult the pump state.
+                    st.sp_next = self._next_emit(st, max(st.sp_next, t))
+                self._generate(st, t)
+        finally:
+            st.sp_pumping = False
+
+    def _next_emit(self, st: _Task, base: float) -> float:
+        cfg = self.config
+        rate = st.sp_rate
+        if cfg.arrival == "uniform":
+            return base + 1.0 / rate
+        if cfg.arrival == "poisson":
+            return base + float(st.sp_rng.exponential(1.0 / rate))
+        # bursty: on/off with unchanged mean rate.
+        period = cfg.burst_period_s
+        on_len = period / cfg.burst_factor
+        nxt = base + 1.0 / (rate * cfg.burst_factor)
+        if nxt % period > on_len:
+            nxt = (math.floor(nxt / period) + 1.0) * period
+        return nxt
+
+    def _generate(self, st: _Task, t: float) -> None:
+        ti = st.topo_i
+        root = _Root(st, t)
+        self._emitted[ti] += 1
+        if t >= self._warm:
+            self._emitted_meas[ti] += 1
+        self._created[ti] += 1
+        if st.acked:
+            st.sp_pending += 1
+            self._open_roots[ti] += 1
+            to = self.tuple_timeout_s
+            if to is not None and t + to <= self._t_end:
+                self._push(t + to, _TIMEOUT, root)
+        st.qsize += 1
+        st.queue.append(root)
+        self._make_eligible(st)
+        self._node_kick(st.node, t)
+
+    # -- node scheduling ------------------------------------------------------
+    def _make_eligible(self, st: _Task) -> None:
+        if not st.in_ring and st.blocked_out == 0 and st.queue:
+            st.node.ring.append(st)
+            st.in_ring = True
+
+    def _node_kick(self, nd: _Node, t: float) -> None:
+        if nd.busy:
+            return
+        ring = nd.ring
+        while ring:
+            st = ring.popleft()
+            st.in_ring = False
+            if st.blocked_out or not st.queue:
+                continue  # frozen or drained since enqueued; drop lazily
+            root = st.queue.popleft()
+            self._dequeued(st, t)
+            if st.queue and st.blocked_out == 0:
+                ring.append(st)
+                st.in_ring = True
+            svc = st.svc
+            if self._svc_rng is not None and svc > 0.0:
+                svc = float(self._svc_rng.exponential(svc))
+            nd.busy = True
+            nd.busy_time += min(svc, max(self._t_end - t, 0.0))
+            self._push(t + svc, _NODE, (nd, st, root))
+            return
+
+    def _dequeued(self, st: _Task, t: float) -> None:
+        """A slot freed in ``st``'s input queue: grant the oldest credit
+        waiter, and wake a window/queue-blocked spout pump."""
+        st.qsize -= 1
+        if st.waiters:
+            src, root, nbytes, route = st.waiters.popleft()
+            st.qsize += 1
+            self._advance(t, route, 0, root, st, nbytes)
+            src.blocked_out -= 1
+            if src.blocked_out == 0:
+                self._make_eligible(src)
+                self._node_kick(src.node, t)
+        if st.is_spout:
+            self._pump(st, t)
+
+    def _on_node_done(self, t: float, payload) -> None:
+        nd, st, root = payload
+        nd.busy = False
+        ti = st.topo_i
+        self._processed[ti] += 1
+        if st.is_spout:
+            n_emit = 1
+        else:
+            st.carry += st.emit_ratio
+            n_emit = int(st.carry)
+            st.carry -= n_emit
+        children = 0
+        if st.edges:
+            for _ in range(n_emit):
+                for edge in st.edges:
+                    self._dispatch(st, edge, root, t)
+                    children += 1
+        if st.is_sink:
+            self._sink_est[ti].add(t)
+            if not st.acked and t >= self._warm:
+                self._lat[ti].append(t - root.t_emit)
+        if st.acked:
+            root.outstanding += children - 1
+            if root.outstanding == 0 and root.state == 0:
+                root.state = 1
+                self._push(t + self.ack_overhead_s, _ACK, root)
+        self._node_kick(nd, t)
+
+    # -- tuple transport ------------------------------------------------------
+    def _route(self, a: str, b: str) -> tuple:
+        r = self._routes.get((a, b))
+        if r is None:
+            if a == b:
+                r = ((1, self.network.lat_inter_process),)
+            else:
+                na, nb = self.cluster.nodes[a], self.cluster.nodes[b]
+                stages = [(0, self._egress[a])]
+                if na.rack_id != nb.rack_id:
+                    stages.append((0, self._rack_up[na.rack_id]))
+                stages.append((1, self.network.latency(self.cluster, a, b)))
+                stages.append((0, self._ingress[b]))
+                r = tuple(stages)
+            self._routes[(a, b)] = r
+        return r
+
+    def _dispatch(self, st: _Task, edge: _Edge, root: _Root, t: float) -> None:
+        dsts = edge.dst
+        if len(dsts) == 1:
+            dst = dsts[0]
+        else:
+            dst = dsts[edge.rr % len(dsts)]
+            edge.rr += 1
+        self._created[st.topo_i] += 1
+        route = self._route(st.node.nid, dst.node.nid)
+        if self._drop_mode[st.topo_i]:
+            self._advance(t, route, 0, root, dst, edge.nbytes)
+            return
+        if dst.qsize >= dst.qcap:
+            dst.waiters.append((st, root, edge.nbytes, route))
+            st.blocked_out += 1
+            return
+        dst.qsize += 1
+        self._advance(t, route, 0, root, dst, edge.nbytes)
+
+    def _advance(self, t, route, i, root, dst: _Task, nbytes) -> None:
+        if i >= len(route):
+            self._enqueue(t, root, dst)
+            return
+        is_lat, v = route[i]
+        if is_lat:
+            self._push(t + v, _ADV, (route, i + 1, root, dst, nbytes))
+        else:
+            self._link_push(v, (route, i + 1, root, dst, nbytes), t)
+
+    def _link_push(self, link: _Link, payload, t: float) -> None:
+        link.fifo.append(payload)
+        if not link.busy:
+            self._link_start(link, t)
+
+    def _link_start(self, link: _Link, t: float) -> None:
+        payload = link.fifo.popleft()
+        ser = payload[4] / link.rate
+        if self._svc_rng is not None and ser > 0.0:
+            ser = float(self._svc_rng.exponential(ser))
+        link.busy = True
+        self._push(t + ser, _LINK, (link, payload))
+
+    def _on_link_done(self, t: float, payload) -> None:
+        link, inner = payload
+        link.busy = False
+        if link.fifo:
+            self._link_start(link, t)
+        self._advance(t, *inner)
+
+    def _enqueue(self, t: float, root: _Root, dst: _Task) -> None:
+        if self._drop_mode[dst.topo_i]:
+            if dst.qsize >= dst.qcap:
+                self._dropped[dst.topo_i] += 1
+                return
+            dst.qsize += 1
+        dst.queue.append(root)
+        self._make_eligible(dst)
+        self._node_kick(dst.node, t)
+
+    # -- ack loop -------------------------------------------------------------
+    def _on_ack(self, t: float, root: _Root) -> None:
+        st = root.spout
+        ti = st.topo_i
+        self._acked[ti] += 1
+        self._open_roots[ti] -= 1
+        st.sp_pending -= 1
+        if t >= self._warm:
+            self._lat[ti].append(t - root.t_emit)
+        self._pump(st, t)
+
+    def _on_timeout(self, t: float, root: _Root) -> None:
+        if root.state != 0:
+            return  # acked (or ack in flight) before the timer fired
+        root.state = 2
+        st = root.spout
+        ti = st.topo_i
+        self._failed[ti] += 1
+        self._replayed[ti] += 1
+        self._open_roots[ti] -= 1
+        st.sp_pending -= 1
+        # The freed window slot re-enters the spout loop: the replacement
+        # emission *is* the replay (Storm re-emits failed roots through the
+        # same nextTuple path, subject to the same rate ceiling).
+        self._pump(st, t)
+
+    # -- sampling & reports ---------------------------------------------------
+    def _on_sample(self, t: float) -> None:
+        for ti, tasks in enumerate(self._topo_tasks):
+            total = 0
+            mx = self._qd_max[ti]
+            for st in tasks:
+                q = len(st.queue)
+                total += q
+                if q > mx:
+                    mx = q
+            self._qd_trace[ti].append(total)
+            self._qd_max[ti] = mx
+        nxt = t + self.config.bucket_s
+        if nxt <= self._t_end:
+            self._push(nxt, _SAMPLE, None)
+
+    def _walk_in_flight(self) -> List[int]:
+        """Independent tuple census at drain (the conservation referee):
+        queued + credit-blocked + in link FIFOs + in service / in propagation
+        (the latter live only as pending heap events)."""
+        n = len(self._scheduled)
+        walked = [0] * n
+        for st in self._tasks:
+            walked[st.topo_i] += len(st.queue) + len(st.waiters)
+        for group in (self._egress, self._ingress, self._rack_up):
+            for key in sorted(group):
+                for payload in group[key].fifo:
+                    walked[payload[3].topo_i] += 1
+        for _, _, kind, payload in self._heap:
+            if kind == _NODE:
+                walked[payload[1].topo_i] += 1
+            elif kind == _LINK:
+                walked[payload[1][3].topo_i] += 1
+            elif kind == _ADV:
+                walked[payload[3].topo_i] += 1
+        return walked
+
+    def _reports(self) -> Dict[str, DesReport]:
+        cfg = self.config
+        meas = max(self._t_end - self._warm, 1e-12)
+        walked = self._walk_in_flight()
+        out: Dict[str, DesReport] = {}
+        for ti, (topo, _) in enumerate(self._scheduled):
+            lats = self._lat[ti]
+            if lats:
+                arr = np.asarray(lats, dtype=np.float64)
+                p50, p95, p99 = (
+                    float(v) for v in np.percentile(arr, [50.0, 95.0, 99.0])
+                )
+                mean_lat = math.fsum(lats) / len(lats)
+            else:
+                p50 = p95 = p99 = None
+                mean_lat = 0.0
+            used = sorted({st.node.nid for st in self._topo_tasks[ti]})
+            node_util = {
+                nid: min(self._nodes[nid].busy_time / self._t_end, 1.0)
+                for nid in used
+            }
+            avg_util = (
+                math.fsum(node_util.values()) / len(node_util)
+                if node_util
+                else 0.0
+            )
+            n_sp = max(self._n_spout_comps[ti], 1)
+            out[topo.id] = DesReport(
+                topology_id=topo.id,
+                spout_rate=self._emitted_meas[ti] / (meas * n_sp),
+                sink_throughput=self._sink_est[ti].rate_in(
+                    self._warm, self._t_end
+                ),
+                binding="measured",
+                latency_s=mean_lat,
+                p50_latency_s=p50,
+                p95_latency_s=p95,
+                p99_latency_s=p99,
+                machines_used=len(used),
+                avg_cpu_utilization=avg_util,
+                node_cpu_utilization=node_util,
+                thrashed_nodes=list(self.thrashed),
+                emitted=self._emitted[ti],
+                acked=self._acked[ti],
+                failed=self._failed[ti],
+                replayed=self._replayed[ti],
+                roots_in_flight=self._open_roots[ti],
+                tuples_created=self._created[ti],
+                tuples_processed=self._processed[ti],
+                tuples_dropped=self._dropped[ti],
+                tuples_in_flight=walked[ti],
+                queue_depth_max=self._qd_max[ti],
+                queue_depth_trace=list(self._qd_trace[ti]),
+                sink_rate_trace=self._sink_est[ti].rates(),
+                sim_time_s=self._t_end,
+                warmup_s=self._warm,
+                events_processed=self.events_processed,
+            )
+        return out
+
+
+def run_des(
+    topology: Topology,
+    assignment: Assignment,
+    cluster: Cluster,
+    network: NetworkModel = EMULAB_NETWORK,
+    config: Optional[DesConfig] = None,
+    **knobs,
+) -> DesReport:
+    """One-shot convenience mirroring ``stream.simulate``."""
+    return DesExecutor(cluster, network, config, **knobs).run(
+        topology, assignment
+    )

@@ -1,0 +1,47 @@
+"""Windowed rate estimation over fixed time buckets (sfctss-style).
+
+The DES reports *measured* sink throughput: completions counted into fixed
+``bucket_s`` buckets, then averaged over the buckets fully inside the
+measurement window.  The per-bucket rate series is also surfaced on the
+report (``sink_rate_trace``) so transient behaviour — a bursty arrival
+phase, a backpressure collapse — is visible, not just the window mean.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List
+
+
+class WindowedRateEstimator:
+    """Count events into fixed-width buckets; report windowed mean rates."""
+
+    def __init__(self, duration_s: float, bucket_s: float):
+        if bucket_s <= 0.0 or duration_s <= 0.0:
+            raise ValueError("duration_s and bucket_s must be > 0")
+        self.bucket_s = bucket_s
+        self.n = max(1, int(math.ceil(duration_s / bucket_s)))
+        self.counts = [0] * self.n
+
+    def add(self, t: float) -> None:
+        i = int(t / self.bucket_s)
+        if i >= self.n:
+            i = self.n - 1
+        elif i < 0:
+            i = 0
+        self.counts[i] += 1
+
+    def rate_in(self, t0: float, t1: float) -> float:
+        """Mean event rate over the buckets fully contained in [t0, t1]."""
+        i0 = int(math.ceil(t0 / self.bucket_s - 1e-9))
+        i1 = min(int(math.floor(t1 / self.bucket_s + 1e-9)), self.n)
+        if i1 <= i0:
+            return 0.0
+        total = 0
+        for i in range(i0, i1):
+            total += self.counts[i]
+        return total / ((i1 - i0) * self.bucket_s)
+
+    def rates(self) -> List[float]:
+        """Per-bucket rate series (the trace the report carries)."""
+        return [c / self.bucket_s for c in self.counts]

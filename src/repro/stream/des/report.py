@@ -1,0 +1,63 @@
+"""Measured per-topology results of one DES run.
+
+``DesReport`` is attribute-compatible with the solver's ``SimResult`` where
+the two overlap (``sink_throughput``, ``spout_rate``, ``latency_s``,
+``machines_used``, ``avg_cpu_utilization``, ``node_cpu_utilization``,
+``thrashed_nodes``, ``binding``) so ``ScenarioRunner`` and
+``SchedulingPlan`` consume either engine's output through one code path —
+and it adds what only a packet-level run can measure: latency percentiles,
+queue-depth traces, and the tuple-conservation ledger.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class DesReport:
+    topology_id: str
+    #: Measured emission rate, tuples/s per spout component (the solver's
+    #: λ* unit, so the cross-validation suite compares like with like).
+    spout_rate: float
+    #: Windowed-estimator sink rate over the measurement window, tuples/s.
+    sink_throughput: float
+    #: Always "measured" — a DES run observes, it does not attribute a
+    #: single binding mechanism the way the fixed-point solver does.
+    binding: str
+    #: Mean end-to-end tuple latency (emit → full ack for acked topologies,
+    #: emit → sink processing for unanchored ones), seconds.
+    latency_s: float
+    p50_latency_s: Optional[float]
+    p95_latency_s: Optional[float]
+    p99_latency_s: Optional[float]
+    machines_used: int
+    avg_cpu_utilization: float
+    node_cpu_utilization: Dict[str, float]
+    thrashed_nodes: List[str]
+    # -- root (spout-tuple) ledger: emitted == acked + failed + in-flight --
+    emitted: int
+    acked: int
+    failed: int          # ack-timeout expirations (each triggers a replay)
+    replayed: int
+    roots_in_flight: int
+    # -- tuple ledger (every copy along the DAG) ---------------------------
+    tuples_created: int
+    tuples_processed: int
+    tuples_dropped: int
+    tuples_in_flight: int  # independently walked at drain, not derived
+    # -- traces ------------------------------------------------------------
+    queue_depth_max: int
+    queue_depth_trace: List[int]     # Σ queued tuples, sampled per bucket
+    sink_rate_trace: List[float]     # per-bucket sink rates
+    sim_time_s: float
+    warmup_s: float
+    events_processed: int
+
+    def throughput_per_10s(self) -> float:
+        """Paper's y-axis unit (tuples/10sec)."""
+        return self.sink_throughput * 10.0
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)

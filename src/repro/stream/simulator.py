@@ -55,6 +55,7 @@ from .network import EMULAB_NETWORK, NetworkModel
 THRASH_FACTOR = 0.002  # effective CPU fraction for memory-thrashed nodes
 NOMINAL_RATE = 1000.0  # tuples/s/task against which cpu_load is declared
 ACK_OVERHEAD_S = 5e-3  # constant acker round-trip (spout→acker→spout)
+TUPLE_TIMEOUT_S = 30.0  # Storm's topology.message.timeout.secs default
 RHO_CAP = 0.999
 _EPS = 1e-12
 
@@ -270,11 +271,18 @@ class Simulator:
         network: NetworkModel = EMULAB_NETWORK,
         thrash_factor: float = THRASH_FACTOR,
         ack_overhead_s: float = ACK_OVERHEAD_S,
+        tuple_timeout_s: float = TUPLE_TIMEOUT_S,
     ):
         self.cluster = cluster
         self.network = network
         self.thrash_factor = thrash_factor
         self.ack_overhead_s = ack_overhead_s
+        # The steady-state fixed point never drives latency anywhere near the
+        # timeout (λ = pending/L with L in milliseconds), so the solver only
+        # *carries* the knob; the DES executor is where timeouts fire and
+        # replays happen.  Keeping it here means both referees read one
+        # config (RunSettings.tuple_timeout_s) instead of private defaults.
+        self.tuple_timeout_s = tuple_timeout_s
 
     # -- public API -------------------------------------------------------------
     def run(self, topology: Topology, assignment: Assignment) -> SimResult:

@@ -31,6 +31,7 @@ HOT = "src/repro/core/search/fixture_mod.py"
 HARNESS = "benchmarks/fixture_bench.py"
 KERNEL = "src/repro/kernels/fixture_kernel.py"  # accelerator kernels (f32 ok)
 SEARCH_KERNEL = "src/repro/core/search/kernels/fixture_kernel.py"
+DES = "src/repro/stream/des/fixture_engine.py"
 OUTSIDE = "tools/fixture_tool.py"
 
 
@@ -75,6 +76,30 @@ def test_zone_rule_sets():
         "hot-loop",
     } <= skernel
     assert rules_for_path(OUTSIDE) == ()
+    # The DES executor is core-zone: its bit-identical-trace contract means
+    # every random draw must flow from a seeded Philox root, and none of the
+    # hot-loop/kernel rules apply (it's a pure-Python event loop).
+    des = set(rules_for_path(DES))
+    assert des == core
+    assert "hot-loop" not in des and "pallas-interpret" not in des
+
+
+def test_des_zone_catches_unseeded_stream():
+    # An unseeded default_rng() in the DES would silently break the
+    # fixed-seed -> bit-identical-trace determinism contract.
+    src = """
+        import numpy as np
+        def service_time(mean):
+            rng = np.random.default_rng()
+            return rng.exponential(mean)
+    """
+    assert "unseeded-random" in rules_hit(src, DES)
+    seeded = """
+        import numpy as np
+        def service_stream(seed):
+            return np.random.Generator(np.random.Philox([seed, 0x5E21CE]))
+    """
+    assert "unseeded-random" not in rules_hit(seeded, DES)
 
 
 def test_outside_zone_is_never_linted():

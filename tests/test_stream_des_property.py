@@ -1,0 +1,40 @@
+"""Property-based DES invariants (hypothesis).
+
+Mirrors ``test_stream_des``'s hand-picked invariant checks across the whole
+config space: any (seed, arrival process, queue bound, ack mode) must
+conserve tuples and reproduce bit-identically.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import RStormScheduler, emulab_cluster  # noqa: E402
+from repro.stream import DesConfig, DesExecutor, topologies  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    arrival=st.sampled_from(["uniform", "poisson", "bursty"]),
+    qcap=st.integers(min_value=2, max_value=64),
+    acked=st.booleans(),
+)
+def test_property_conservation_and_determinism(seed, arrival, qcap, acked):
+    topo = topologies.linear(False, parallelism=2)
+    topo.acked = acked
+    cl = emulab_cluster()
+    a = RStormScheduler().schedule(topo, cl, commit=False)
+    cl.reset()
+    cfg = DesConfig(
+        duration_s=0.12, seed=seed, arrival=arrival, queue_capacity=qcap
+    )
+    rep = DesExecutor(cl, config=cfg).run(topo, a)
+    assert rep.tuples_created == (
+        rep.tuples_processed + rep.tuples_dropped + rep.tuples_in_flight
+    )
+    if rep.acked or rep.failed or rep.roots_in_flight:
+        assert rep.emitted == rep.acked + rep.failed + rep.roots_in_flight
+    rep2 = DesExecutor(cl, config=cfg).run(topo, a)
+    assert rep.to_dict() == rep2.to_dict()
