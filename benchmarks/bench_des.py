@@ -11,6 +11,7 @@ machine-dependent and deliberately not gated.
 from __future__ import annotations
 
 from repro.core import RStormScheduler, emulab_cluster
+from repro.obs import MetricsHub
 from repro.stream import DesConfig, DesExecutor, Simulator, topologies
 
 from .common import emit_csv_row, timed
@@ -71,6 +72,32 @@ def run(smoke: bool = False) -> list:
         f"events_per_s={rep.events_processed / max(wall, 1e-9):.0f}",
     )
     rows.append(("scale", rep, None))
+    # Instrumentation-overhead row: the same scale case re-run under an
+    # enabled MetricsHub.  ``sink_tp`` is gated — telemetry is contractually
+    # invisible to the physics, so it must match the bare run exactly;
+    # ``events_per_s``/``overhead_pct`` are wall-clock context (not gated,
+    # budget: instrumented stays within ~5% of bare).  The hub's JSONL goes
+    # to OBS_bench_des.jsonl for the report-CLI smoke + CI artifact.
+    hub = MetricsHub()
+    ex = DesExecutor(cl, config=DesConfig(duration_s=0.05 if smoke else 0.2))
+
+    def _run_instrumented():
+        with hub.activate():
+            return ex.run(topo, a)
+
+    rep_obs, wall_obs = timed(_run_instrumented, repeat=1)
+    hub.export("OBS_bench_des.jsonl")
+    overhead = (wall_obs / max(wall, 1e-9) - 1.0) * 100.0
+    emit_csv_row(
+        "des_obs/star_net_instrumented",
+        wall_obs * 1e6,
+        f"sink_tp={rep_obs.sink_throughput:.1f}tuples/s;"
+        f"events_per_s={rep_obs.events_processed / max(wall_obs, 1e-9):.0f};"
+        f"overhead_pct={overhead:+.1f}%;"
+        f"identical_to_bare={rep_obs.to_dict() == rep.to_dict()};"
+        f"records={len(hub.records())}",
+    )
+    rows.append(("scale_obs", rep_obs, None))
     return rows
 
 

@@ -69,6 +69,22 @@ ZONES: Tuple[Zone, ...] = (
         rules=("hot-loop", "float32-literal"),
         set_attrs=SET_ATTRS,
     ),
+    # The observability plane: telemetry must itself be deterministic (a
+    # fixed seed exports byte-identical JSONL), so the registry/hub/report
+    # code carries the core determinism rules plus hot-loop — wall-clock
+    # reads are confined to the one allow-listed shim in ``obs/clock.py``.
+    Zone(
+        name="obs",
+        anchors=("repro/obs",),
+        rules=(
+            "unseeded-random",
+            "iter-order",
+            "float-sum",
+            "np-reduce-dtype",
+            "hot-loop",
+        ),
+        set_attrs=SET_ATTRS,
+    ),
     # Benchmarks and examples feed the committed quality baselines and the
     # documented replays — their numbers must be as reproducible as the
     # core's (timing columns are exempt by design, so no hot-loop rules).

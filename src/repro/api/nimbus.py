@@ -30,6 +30,7 @@ from ..core.registry import get_scheduler
 from ..core.rescheduler import RebalanceResult, Rescheduler, StragglerMitigator
 from ..core.resources import BANDWIDTH, CPU, MEMORY
 from ..core.topology import Topology
+from ..obs import MetricsHub, get_hub
 from .errors import (
     PayloadValidationError,
     ScenarioReplayError,
@@ -192,7 +193,15 @@ class Nimbus:
     is scheduling against an environment other than the one they declared.
     """
 
-    def __init__(self, cluster: Union[Cluster, ClusterSpec, None] = None):
+    def __init__(
+        self,
+        cluster: Union[Cluster, ClusterSpec, None] = None,
+        hub: Optional[MetricsHub] = None,
+    ):
+        #: Explicit telemetry hub.  When None, each plan/submit consults the
+        #: payload's ``settings.obs`` (fresh hub per call when enabled) and
+        #: otherwise inherits whatever hub is ambient via ``obs.get_hub``.
+        self.hub = hub
         self._cluster_spec: Optional[ClusterSpec] = None
         #: Soft-constraint weights used by rebalance/migration (Alg 4's user
         #: weights); updated by ``set_weights`` / a ``WeightsChangeEvent``.
@@ -251,6 +260,24 @@ class Nimbus:
             cluster = self.state.cluster
         return topology, scheduler, cluster
 
+    def _hub_for(self, settings) -> MetricsHub:
+        """The telemetry hub one plan/submit runs under.
+
+        Resolution order: an explicit ``Nimbus(hub=...)`` wins; else the
+        payload's ``settings.obs`` (fresh hub per call, so two identical
+        submissions export byte-identical JSONL); else the ambient hub."""
+        if self.hub is not None:
+            return self.hub
+        obs = getattr(settings, "obs", None)
+        if obs is not None and obs.enabled:
+            return MetricsHub()
+        return get_hub()
+
+    def _export_obs(self, hub: MetricsHub, settings) -> None:
+        obs = getattr(settings, "obs", None)
+        if obs is not None and hub.enabled and obs.export_path:
+            hub.export(obs.export_path, include_wall=obs.include_wall)
+
     def _simulate(
         self,
         topology: Topology,
@@ -258,7 +285,9 @@ class Nimbus:
         cluster: Cluster,
         settings=None,
     ):
-        return self._engine(cluster, settings).run(topology, assignment)
+        engine = getattr(settings, "sim_engine", "solver") if settings else "solver"
+        with get_hub().span("nimbus.simulate", topology=topology.id, engine=engine):
+            return self._engine(cluster, settings).run(topology, assignment)
 
     def _engine(self, cluster: Cluster, settings=None):
         """The referee a payload's settings ask for — the steady-state
@@ -285,16 +314,26 @@ class Nimbus:
     def plan(self, payload: SchedulingPayload) -> SchedulingPlan:
         """Dry-run scheduling: neither the cluster nor GlobalState changes
         (an empty Nimbus stays empty — nothing is pinned by planning)."""
-        topology, scheduler, cluster = self._prepare(payload, persist=False)
-        assignment = scheduler.schedule(topology, cluster, commit=False)
-        sim = (
-            self._simulate(topology, assignment, cluster, payload.settings)
-            if payload.settings.simulate
-            else None
-        )
-        return SchedulingPlan.from_assignment(
-            assignment, topology, cluster, committed=False, sim=sim
-        )
+        hub = self._hub_for(payload.settings)
+        with hub.activate(), hub.span(
+            "nimbus.plan",
+            topology=payload.topology.id,
+            scheduler=payload.scheduler.name,
+        ) as span:
+            topology, scheduler, cluster = self._prepare(payload, persist=False)
+            with hub.span("nimbus.schedule", scheduler=payload.scheduler.name):
+                assignment = scheduler.schedule(topology, cluster, commit=False)
+            sim = (
+                self._simulate(topology, assignment, cluster, payload.settings)
+                if payload.settings.simulate
+                else None
+            )
+            plan = SchedulingPlan.from_assignment(
+                assignment, topology, cluster, committed=False, sim=sim
+            )
+            span.set(placed=len(plan.placements), unassigned=len(plan.unassigned))
+        self._export_obs(hub, payload.settings)
+        return plan
 
     def submit(self, payload: SchedulingPayload) -> SchedulingPlan:
         """Plan, then atomically commit onto the live cluster.
@@ -303,6 +342,17 @@ class Nimbus:
         id, or (with ``allow_partial=False``) cannot be fully placed is
         rejected before any cluster mutation.
         """
+        hub = self._hub_for(payload.settings)
+        with hub.activate(), hub.span(
+            "nimbus.submit",
+            topology=payload.topology.id,
+            scheduler=payload.scheduler.name,
+        ) as span:
+            plan = self._submit_locked(payload, hub, span)
+        self._export_obs(hub, payload.settings)
+        return plan
+
+    def _submit_locked(self, payload, hub, span) -> SchedulingPlan:
         was_empty = self.state is None
         topology, scheduler, cluster = self._prepare(payload, persist=True)
         try:
@@ -313,7 +363,8 @@ class Nimbus:
                         "kill it first or choose a different id"
                     ]
                 )
-            assignment = scheduler.schedule(topology, cluster, commit=False)
+            with hub.span("nimbus.schedule", scheduler=payload.scheduler.name):
+                assignment = scheduler.schedule(topology, cluster, commit=False)
             if assignment.unassigned and not payload.settings.allow_partial:
                 raise UnschedulablePayloadError(topology.id, assignment.unassigned)
         except BaseException:
@@ -329,9 +380,11 @@ class Nimbus:
             if payload.settings.simulate
             else None
         )
-        return SchedulingPlan.from_assignment(
+        plan = SchedulingPlan.from_assignment(
             assignment, topology, cluster, committed=True, sim=sim
         )
+        span.set(placed=len(plan.placements), unassigned=len(plan.unassigned))
+        return plan
 
     def kill(self, topology_id: str) -> Assignment:
         """Remove a submitted topology, returning its resources to the cluster."""
@@ -380,9 +433,15 @@ class Nimbus:
         and ``unplaced`` task-id lists."""
         if self.state is None:
             return RebalanceResult()
-        return Rescheduler(
-            self.state, weights if weights is not None else self._weights
-        ).rebalance()
+        hub = self.hub if self.hub is not None else get_hub()
+        with hub.activate(), hub.span("nimbus.rebalance") as span:
+            result = Rescheduler(
+                self.state, weights if weights is not None else self._weights
+            ).rebalance()
+            span.set(
+                moved=result.moved_count(), unplaced=result.unplaced_count()
+            )
+        return result
 
     def migrate_stragglers(
         self,
@@ -462,7 +521,11 @@ class Nimbus:
                 else {}
             )
             executor = DesExecutor(self.state.cluster, config=config, **knobs)
-            return executor.run_many(pairs)
+            hub = self.hub if self.hub is not None else get_hub()
+            with hub.activate(), hub.span(
+                "nimbus.simulate", engine="des", topologies=len(pairs)
+            ):
+                return executor.run_many(pairs)
         from ..stream.simulator import Simulator
 
         solver = (
@@ -475,7 +538,11 @@ class Nimbus:
             if settings is not None
             else Simulator(self.state.cluster)
         )
-        return solver.run_many(pairs, warm_start=warm_start)
+        hub = self.hub if self.hub is not None else get_hub()
+        with hub.activate(), hub.span(
+            "nimbus.simulate", engine="solver", topologies=len(pairs)
+        ):
+            return solver.run_many(pairs, warm_start=warm_start)
 
     # -- event-sourced dispatch (the scenario timeline entry point) ----------------
     def apply(self, event: Any) -> Dict[str, Any]:

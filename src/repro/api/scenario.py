@@ -30,6 +30,7 @@ import json
 from typing import Any, ClassVar, Dict, List, Mapping, Optional, Tuple
 
 from ..core.resources import BANDWIDTH, CPU, MEMORY
+from ..obs import MetricsHub, get_hub
 from .errors import PayloadValidationError, ScenarioReplayError
 from .nimbus import Nimbus
 from .specs import (
@@ -556,6 +557,13 @@ class ScenarioRunner:
     (``engine="des"``, optionally with a ``DesSettings``/``DesConfig`` in
     ``des``).  DES intervals additionally carry latency percentiles in the
     trace; warm starts don't apply (every interval is a full packet run).
+
+    ``hub`` opts into deterministic telemetry: each replay step becomes a
+    ``scenario.step`` span, and per-interval cluster state is published as
+    step-keyed series (``scenario.sink_throughput``, ``scenario.network_cost``,
+    ``scenario.machines_used``, ``scenario.alive_nodes``) alongside whatever
+    the scheduler/referee record under the same hub.  The trace itself is
+    unchanged — telemetry rides next to it, never inside it.
     """
 
     def __init__(
@@ -564,6 +572,7 @@ class ScenarioRunner:
         warm_start: bool = True,
         engine: str = "solver",
         des=None,
+        hub: Optional[MetricsHub] = None,
     ):
         if engine not in ("solver", "des"):
             raise ValueError(f"engine must be 'solver' or 'des', got {engine!r}")
@@ -571,31 +580,57 @@ class ScenarioRunner:
         self.warm_start = warm_start
         self.engine = engine
         self.des = des
+        self.hub = hub
 
     def run(self) -> ScenarioTrace:
+        hub = self.hub if self.hub is not None else get_hub()
+        with hub.activate():
+            return self._run(hub)
+
+    def _run(self, hub: MetricsHub) -> ScenarioTrace:
         nimbus = Nimbus(self.spec.cluster)
         trace = ScenarioTrace(scenario=self.spec.name)
         rates: Dict[str, float] = {}
         for step, event in enumerate(self.spec.timeline):
-            try:
-                outcome = nimbus.apply(event)
-            except Exception as e:
-                # Static validation can't catch everything (e.g. a submit
-                # that turns out unschedulable); name the failing step.
-                raise ScenarioReplayError(
-                    f"applying {event.kind!r}: {type(e).__name__}: {e}",
-                    step=step,
-                ) from e
-            sims = nimbus.simulate_all(
-                warm_start=rates if self.warm_start else None,
-                engine=self.engine,
-                des=self.des,
-            )
+            with hub.span("scenario.step", step=step, kind=event.kind):
+                try:
+                    outcome = nimbus.apply(event)
+                except Exception as e:
+                    # Static validation can't catch everything (e.g. a submit
+                    # that turns out unschedulable); name the failing step.
+                    raise ScenarioReplayError(
+                        f"applying {event.kind!r}: {type(e).__name__}: {e}",
+                        step=step,
+                    ) from e
+                sims = nimbus.simulate_all(
+                    warm_start=rates if self.warm_start else None,
+                    engine=self.engine,
+                    des=self.des,
+                )
             rates = {tid: r.spout_rate for tid, r in sims.items()}
-            trace.entries.append(
-                self._entry(step, event, outcome, nimbus, sims)
-            )
+            entry = self._entry(step, event, outcome, nimbus, sims)
+            trace.entries.append(entry)
+            if hub.enabled:
+                self._record_obs(hub, entry)
         return trace
+
+    def _record_obs(self, hub: MetricsHub, entry: "ScenarioTraceEntry") -> None:
+        """Publish one interval's cluster state as step-keyed series."""
+        name = self.spec.name
+        hub.series("scenario.machines_used", scenario=name).append(
+            entry.step, entry.machines_used
+        )
+        hub.series("scenario.alive_nodes", scenario=name).append(
+            entry.step, entry.alive_nodes
+        )
+        for tid in sorted(entry.topologies):
+            hub.series(
+                "scenario.sink_throughput", scenario=name, topology=tid
+            ).append(entry.step, float(entry.topologies[tid]["sink_throughput"]))
+        for tid in sorted(entry.network_cost):
+            hub.series(
+                "scenario.network_cost", scenario=name, topology=tid
+            ).append(entry.step, float(entry.network_cost[tid]))
 
     def _entry(self, step, event, outcome, nimbus: Nimbus, sims) -> ScenarioTraceEntry:
         state, cluster = nimbus.state, nimbus.cluster
@@ -648,6 +683,9 @@ def run_scenario(
     warm_start: bool = True,
     engine: str = "solver",
     des=None,
+    hub: Optional[MetricsHub] = None,
 ) -> ScenarioTrace:
     """One-shot convenience: validate + replay a scenario."""
-    return ScenarioRunner(spec, warm_start=warm_start, engine=engine, des=des).run()
+    return ScenarioRunner(
+        spec, warm_start=warm_start, engine=engine, des=des, hub=hub
+    ).run()

@@ -766,6 +766,63 @@ class DesSettings:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsSettings:
+    """Declarative opt-in to the ``repro.obs`` telemetry plane.
+
+    ``enabled`` — activate a ``MetricsHub`` for the submission so the
+    scheduler, the chosen referee and the control plane publish metrics
+    and spans into it.
+    ``export_path`` — write the hub's deterministic JSONL there after the
+    run (consumed by ``python -m repro.obs.report``).
+    ``include_wall`` — also export wall-clock span durations; off by
+    default because wall times break byte-identical goldens.
+    """
+
+    enabled: bool = True
+    export_path: Optional[str] = None
+    include_wall: bool = False
+
+    _FIELDS = ("enabled", "export_path", "include_wall")
+
+    def validate(self, path: str = "settings.obs") -> List[str]:
+        errors: List[str] = []
+        for name in ("enabled", "include_wall"):
+            v = getattr(self, name)
+            if not isinstance(v, bool):
+                errors.append(f"{path}.{name}: must be a bool, got {v!r}")
+        if self.export_path is not None and (
+            not isinstance(self.export_path, str) or not self.export_path
+        ):
+            errors.append(
+                f"{path}.export_path: must be null or a non-empty string, "
+                f"got {self.export_path!r}"
+            )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"enabled": self.enabled}
+        if self.export_path is not None:
+            out["export_path"] = self.export_path
+        if self.include_wall:
+            out["include_wall"] = self.include_wall
+        return out
+
+    @classmethod
+    def from_dict(cls, d: Any, path: str, errors: List[str]) -> "ObsSettings":
+        d = dict(_require_mapping(d, path))
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            enabled=_get(d, "enabled", (bool,), path, errors, default=True),
+            export_path=_get(
+                d, "export_path", (str,), path, errors, default=None, allow_none=True
+            ),
+            include_wall=_get(
+                d, "include_wall", (bool,), path, errors, default=False
+            ),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class RunSettings:
     """Per-submission knobs.
 
@@ -781,6 +838,8 @@ class RunSettings:
     payload can pin Storm's acker round-trip, the memory-thrash penalty and
     the message timeout as data instead of relying on hard-coded defaults.
     ``des`` — optional ``DesSettings`` pinning the DES run itself.
+    ``obs`` — optional ``ObsSettings`` turning on deterministic telemetry
+    (metrics + spans, optional JSONL export) for the submission.
 
     Serialization is sparse: only non-default knobs are emitted, so
     payloads written before a knob existed round-trip byte-identically.
@@ -793,10 +852,11 @@ class RunSettings:
     thrash_factor: float = 0.002   # stream.simulator.THRASH_FACTOR
     tuple_timeout_s: float = 30.0  # stream.simulator.TUPLE_TIMEOUT_S
     des: Optional[DesSettings] = None
+    obs: Optional[ObsSettings] = None
 
     _FIELDS = (
         "allow_partial", "simulate", "sim_engine", "ack_overhead_s",
-        "thrash_factor", "tuple_timeout_s", "des",
+        "thrash_factor", "tuple_timeout_s", "des", "obs",
     )
     _ENGINES = ("solver", "des")
 
@@ -822,6 +882,13 @@ class RunSettings:
                 errors.append(
                     f"{path}.des: expected DesSettings or null, got {self.des!r}"
                 )
+        if self.obs is not None:
+            if isinstance(self.obs, ObsSettings):
+                errors.extend(self.obs.validate(f"{path}.obs"))
+            else:
+                errors.append(
+                    f"{path}.obs: expected ObsSettings or null, got {self.obs!r}"
+                )
         return errors
 
     def to_dict(self) -> Dict[str, Any]:
@@ -839,6 +906,8 @@ class RunSettings:
             out["tuple_timeout_s"] = self.tuple_timeout_s
         if self.des is not None:
             out["des"] = self.des.to_dict()
+        if self.obs is not None:
+            out["obs"] = self.obs.to_dict()
         return out
 
     @classmethod
@@ -846,6 +915,7 @@ class RunSettings:
         d = dict(_require_mapping(d, path))
         _check_keys(d, path, cls._FIELDS, errors)
         des = d.get("des")
+        obs = d.get("obs")
         return cls(
             allow_partial=_get(d, "allow_partial", (bool,), path, errors, default=True),
             simulate=_get(d, "simulate", (bool,), path, errors, default=False),
@@ -862,6 +932,11 @@ class RunSettings:
             des=(
                 DesSettings.from_dict(des, f"{path}.des", errors)
                 if des is not None
+                else None
+            ),
+            obs=(
+                ObsSettings.from_dict(obs, f"{path}.obs", errors)
+                if obs is not None
                 else None
             ),
         )

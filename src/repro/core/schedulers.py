@@ -19,11 +19,11 @@ from __future__ import annotations
 import copy
 import itertools
 import random
-import time
 from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
+from ..obs import clock as obs_clock
 from .assignment import Assignment
 from .cluster import Cluster
 from .engine import ArenaSelector, PlacementArena, SwapAnnealer
@@ -79,7 +79,7 @@ class Scheduler:
         t0: float,
     ) -> Assignment:
         assignment.scheduler_name = self.name
-        assignment.schedule_time_s = time.perf_counter() - t0
+        assignment.schedule_time_s = obs_clock.perf_counter() - t0
         if commit:
             # Atomic apply onto the real cluster (paper §4.1).
             assignment.apply(topology, cluster)
@@ -99,7 +99,7 @@ class RStormScheduler(Scheduler):
         self.engine = _check_engine(engine)
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         topology.validate()
         assignment = Assignment(topology_id=topology.id)
         if self.engine == "legacy":
@@ -229,7 +229,7 @@ class RoundRobinScheduler(Scheduler):
         return [n for n in nodes for _ in range(cluster.nodes[n].spec.num_worker_slots)]
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         topology.validate()
         assignment = Assignment(topology_id=topology.id)
         # Placements depend only on specs and liveness, so both engines share
@@ -313,7 +313,7 @@ class AnnealedScheduler(Scheduler):
         self.engine = _check_engine(engine)
 
     def schedule(self, topology: Topology, cluster: Cluster, *, commit: bool = True) -> Assignment:
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
         rng = random.Random(self.seed)
         if self.engine == "legacy":
             seed_assignment = RStormScheduler(self.weights, engine="legacy").schedule(

@@ -31,10 +31,11 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ...obs import get_hub
 from ..engine.arena import swap_network_delta, swap_overload_delta
 from .backend import jax_modules, resolve_backend, x64
 from .batch import BatchArena
-from .objective import OVERLOAD_PENALTY
+from .objective import OVERLOAD_PENALTY, evaluate_batch
 from .throughput import (
     ThroughputModel,
     ack_lambda,
@@ -51,6 +52,84 @@ OBJECTIVES = ("netcost", "throughput")
 #: swaps that worsen the placement by up to this much, escaping the greedy
 #: seed's local minimum; anneals linearly to 0.
 DEFAULT_T0 = 2.0
+
+#: Max best-so-far curve points per annealer run when a MetricsHub is
+#: active.  Curve marks land on multiples of the jax path's fused block
+#: size, so an instrumented run replays the *exact* uninstrumented chain:
+#: the jitted steps return their full carry, and chains split across call
+#: boundaries never diverge (see ``_jax_anneal_tp_fn``).
+CURVE_POINTS = 8
+
+
+def _curve_marks(steps: int, k: int, n_points: int = CURVE_POINTS) -> list:
+    """Ascending proposal counts (multiples of ``k``; the final step always
+    included) at which the best-so-far objective curve is sampled."""
+    k = max(1, min(k, steps))
+    blocks = steps // k
+    marks = sorted({(blocks * p // n_points) * k for p in range(1, n_points + 1)} - {0})
+    if steps not in marks:
+        marks.append(steps)
+    return marks
+
+
+def _mark_segments(lo: int, hi: int, marks):
+    """Split the proposal range [lo, hi) at any interior curve marks."""
+    if not marks:
+        yield lo, hi
+        return
+    prev = lo
+    for m in marks:
+        if lo < m < hi:
+            yield prev, m
+            prev = m
+    yield prev, hi
+
+
+class _AnnealObs:
+    """Hub-enabled annealer instrumentation (``repro.obs``): a best-so-far
+    objective curve on the proposal-count axis plus per-chain acceptance.
+    Pure read-side — it evaluates placements the chains already produced,
+    so recording never perturbs a chain."""
+
+    def __init__(self, hub, ba: BatchArena, objective: str, tm) -> None:
+        self.hub = hub
+        self.ba = ba
+        self.objective = objective
+        self.tm = tm
+        self.best: Optional[float] = None
+        self.series = hub.series("search.best_objective", objective=objective)
+
+    def point(self, n_swaps: int, P, state=None, tp=None) -> None:
+        if self.objective == "throughput":
+            if tp is None:
+                # Carried jax aggregates are exact (grid-quantized), so the
+                # host-side proxy equals the in-scan carried value.
+                vals = [np.asarray(s) for s in state]
+                tp = proxy_from_state(*vals, self.tm)
+            cur = float(np.max(tp))
+            self.best = cur if self.best is None else max(self.best, cur)
+        else:
+            ev = evaluate_batch(
+                self.ba, np.asarray(P).astype(np.intp), backend="numpy"
+            )
+            cur = float(np.min(ev.penalized()))
+            self.best = cur if self.best is None else min(self.best, cur)
+        self.series.append(n_swaps, self.best)
+
+    def finish(self, acc: np.ndarray, steps: int) -> None:
+        acc = np.asarray(acc, dtype=np.int64)
+        n_chains = acc.shape[0]
+        total = int(acc.sum(dtype=np.int64))
+        self.hub.counter("search.proposals").inc(steps * n_chains)
+        self.hub.counter("search.accepted").inc(total)
+        self.hub.gauge("search.accept_rate", objective=self.objective).set(
+            total / max(steps * n_chains, 1)
+        )
+        rates = self.hub.series(
+            "search.chain_accept_rate", objective=self.objective
+        )
+        for b in range(n_chains):
+            rates.append(b, int(acc[b]) / max(steps, 1))
 
 
 def swap_proposals(
@@ -124,24 +203,34 @@ class BatchAnnealer:
         ii, jj = swap_proposals(n_tasks, steps, n_chains, seed)
         thresh = np.linspace(float(t0), 0.0, steps)
         used0 = self.ba.used(P0)
+        # Ambient observability: a live MetricsHub gets acceptance counts
+        # and a best-so-far curve; with NULL_HUB (the default) ``rec`` is
+        # None and every recording site is skipped.
+        hub = get_hub()
+        rec = _AnnealObs(hub, self.ba, objective, tm) if hub.enabled else None
         # "pallas" selects the fused evaluator in evaluate_batch/
         # throughput_batch; the annealer's hot loop is the fused multi-swap
         # scan either way, so it shares the jax path (bit-identical chains).
         use_jax = self.backend in ("jax", "pallas")
         if objective == "throughput":
             if use_jax:
-                return self._run_jax_tp(P0, used0, ii, jj, thresh, tm, multi_swap)
-            return self._run_numpy_tp(P0, used0, ii, jj, thresh, tm)
+                return self._run_jax_tp(
+                    P0, used0, ii, jj, thresh, tm, multi_swap, rec
+                )
+            return self._run_numpy_tp(P0, used0, ii, jj, thresh, tm, rec)
         if use_jax:
-            return self._run_jax(P0, used0, ii, jj, thresh, multi_swap)
-        return self._run_numpy(P0, used0, ii, jj, thresh)
+            return self._run_jax(P0, used0, ii, jj, thresh, multi_swap, rec)
+        return self._run_numpy(P0, used0, ii, jj, thresh, rec)
 
     # -- numpy fallback --------------------------------------------------------
-    def _run_numpy(self, P0, used0, ii, jj, thresh) -> np.ndarray:
+    def _run_numpy(self, P0, used0, ii, jj, thresh, rec=None) -> np.ndarray:
         ba = self.ba
         P = P0.astype(np.intp, copy=True)
         used = used0.copy()
         bidx = np.arange(P.shape[0])
+        acc = np.zeros(P.shape[0], dtype=np.int64)
+        marks = _curve_marks(ii.shape[0], 1) if rec is not None else []
+        nm = 0
         for s in range(ii.shape[0]):
             i, j = ii[s], jj[s]
             na, nb = P[bidx, i], P[bidx, j]
@@ -161,15 +250,24 @@ class BatchAnnealer:
             du = np.where(accept[:, None], dj - di, 0.0)
             np.add.at(used, (bidx, na), du)
             np.add.at(used, (bidx, nb), -du)
+            acc += accept
+            if rec is not None and nm < len(marks) and s + 1 == marks[nm]:
+                rec.point(s + 1, P)
+                nm += 1
+        if rec is not None:
+            rec.finish(acc, ii.shape[0])
         return P
 
     # -- numpy fallback, throughput objective ----------------------------------
-    def _run_numpy_tp(self, P0, used0, ii, jj, thresh, tm) -> np.ndarray:
+    def _run_numpy_tp(self, P0, used0, ii, jj, thresh, tm, rec=None) -> np.ndarray:
         ba = self.ba
         P = P0.astype(np.intp, copy=True)
         used = used0.copy()
         B = P.shape[0]
         bidx = np.arange(B)
+        acc = np.zeros(B, dtype=np.int64)
+        marks = _curve_marks(ii.shape[0], 1) if rec is not None else []
+        nm = 0
         cpu_load, mem_used, egress, ingress, rack_up, ack_num = aggregates_numpy(
             ba, tm, P
         )
@@ -244,10 +342,16 @@ class BatchAnnealer:
             rack_up = np.where(w, rk, rack_up)
             ack_num = np.where(w, an, ack_num)
             tp = np.where(accept, tp_new, tp)
+            acc += accept
+            if rec is not None and nm < len(marks) and s + 1 == marks[nm]:
+                rec.point(s + 1, P, tp=tp)
+                nm += 1
+        if rec is not None:
+            rec.finish(acc, ii.shape[0])
         return P
 
     # -- jax scan, throughput objective ----------------------------------------
-    def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm, k) -> np.ndarray:
+    def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm, k, rec=None) -> np.ndarray:
         ba = self.ba
         state = aggregates_numpy(ba, tm, P0.astype(np.intp))
         model_args = (
@@ -259,27 +363,45 @@ class BatchAnnealer:
             np.float64(tm.sink_rate),
         )
         P, used = P0.astype(np.int32), used0
+        acc = np.zeros(P0.shape[0], dtype=np.int32)
+        steps = ii.shape[0]
+        marks = _curve_marks(steps, min(k, steps)) if rec is not None else None
         with x64():
-            for lo, hi, kk in _swap_blocks(ii.shape[0], k):
-                P, used, state = _jax_anneal_tp_fn(tm.ack, kk)(
-                    *model_args, P, used, state,
-                    _rows(ii, lo, hi, kk), _rows(jj, lo, hi, kk),
-                    thresh[lo:hi].reshape(-1, kk),
-                )
+            for lo, hi, kk in _swap_blocks(steps, k):
+                # Curve marks only split the scan at full-carry boundaries,
+                # which is bit-identical to the unsplit scan by contract.
+                for mlo, mhi in _mark_segments(lo, hi, marks):
+                    P, used, state, acc = _jax_anneal_tp_fn(tm.ack, kk)(
+                        *model_args, P, used, state, acc,
+                        _rows(ii, mlo, mhi, kk), _rows(jj, mlo, mhi, kk),
+                        thresh[mlo:mhi].reshape(-1, kk),
+                    )
+                    if rec is not None:
+                        rec.point(mhi, np.asarray(P), state=state)
+        if rec is not None:
+            rec.finish(np.asarray(acc), steps)
         return np.asarray(P).astype(np.intp)
 
     # -- jax scan --------------------------------------------------------------
-    def _run_jax(self, P0, used0, ii, jj, thresh, k) -> np.ndarray:
+    def _run_jax(self, P0, used0, ii, jj, thresh, k, rec=None) -> np.ndarray:
         ba = self.ba
         P, used = P0.astype(np.int32), used0
+        acc = np.zeros(P0.shape[0], dtype=np.int32)
+        steps = ii.shape[0]
+        marks = _curve_marks(steps, min(k, steps)) if rec is not None else None
         with x64():
-            for lo, hi, kk in _swap_blocks(ii.shape[0], k):
-                P, used = _jax_anneal_fn(kk)(
-                    ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
-                    P, used,
-                    _rows(ii, lo, hi, kk), _rows(jj, lo, hi, kk),
-                    thresh[lo:hi].reshape(-1, kk),
-                )
+            for lo, hi, kk in _swap_blocks(steps, k):
+                for mlo, mhi in _mark_segments(lo, hi, marks):
+                    P, used, acc = _jax_anneal_fn(kk)(
+                        ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
+                        P, used, acc,
+                        _rows(ii, mlo, mhi, kk), _rows(jj, mlo, mhi, kk),
+                        thresh[mlo:mhi].reshape(-1, kk),
+                    )
+                    if rec is not None:
+                        rec.point(mhi, np.asarray(P))
+        if rec is not None:
+            rec.finish(np.asarray(acc), steps)
         return np.asarray(P).astype(np.intp)
 
 
@@ -313,10 +435,10 @@ def _jax_anneal_fn(k: int):
     jax, jnp = jax_modules()
 
     @jax.jit
-    def anneal(net, avail, hard_demand, adj, adj_mask, P0, used0, ii, jj, thresh):
+    def anneal(net, avail, hard_demand, adj, adj_mask, P0, used0, acc0, ii, jj, thresh):
         bidx = jnp.arange(P0.shape[0])
 
-        def swap(P, used, i, j, th):
+        def swap(P, used, acc, i, j, th):
             na, nb = P[bidx, i], P[bidx, j]
             ai, mi = adj[i], adj_mask[i]
             aj, mj = adj[j], adj_mask[j]
@@ -333,17 +455,19 @@ def _jax_anneal_fn(k: int):
             P = P.at[bidx, j].set(jnp.where(accept, na, nb))
             du = jnp.where(accept[:, None], dj - di, 0.0)
             used = used.at[bidx, na].add(du).at[bidx, nb].add(-du)
-            return P, used
+            # Pure integer side-channel for the per-chain acceptance-rate
+            # telemetry — no float path reads it, so chains are unchanged.
+            return P, used, acc + accept.astype(jnp.int32)
 
         def step(carry, xs):
-            P, used = carry
+            P, used, acc = carry
             i, j, th = xs  # (k, B), (k, B), (k,)
             for r in range(k):
-                P, used = swap(P, used, i[r], j[r], th[r])
-            return (P, used), None
+                P, used, acc = swap(P, used, acc, i[r], j[r], th[r])
+            return (P, used, acc), None
 
-        (P, used), _ = jax.lax.scan(step, (P0, used0), (ii, jj, thresh))
-        return P, used
+        (P, used, acc), _ = jax.lax.scan(step, (P0, used0, acc0), (ii, jj, thresh))
+        return P, used, acc
 
     return anneal
 
@@ -367,7 +491,7 @@ def _jax_anneal_tp_fn(ack, k: int):
         task_cpu, task_mem, cpu_cap, mem_cap, nic_cap, rack_cap,
         adj_bytes, adj_src, adj_comp, adj_lat, rack_of, den_flow,
         thrash_factor, source_bound, sink_rate,
-        P0, used0, state0, ii, jj, thresh,
+        P0, used0, state0, acc0, ii, jj, thresh,
     ):
         bidx = jnp.arange(P0.shape[0])
         cpu0, mem0, eg0, in0, rk0, an0 = state0
@@ -381,7 +505,10 @@ def _jax_anneal_tp_fn(ack, k: int):
         ) * sink_rate
 
         def swap(carry, i, j, th):
-            P, used, cpu_load, mem_used, egress, ingress, rack_up, ack_num, tp = carry
+            (
+                P, used, cpu_load, mem_used, egress, ingress,
+                rack_up, ack_num, tp, acc,
+            ) = carry
             na, nb = P[bidx, i], P[bidx, j]
             ai, mi = adj[i], adj_mask[i]
             aj, mj = adj[j], adj_mask[j]
@@ -433,6 +560,8 @@ def _jax_anneal_tp_fn(ack, k: int):
                 jnp.where(w, rk, rack_up),
                 jnp.where(w, an, ack_num),
                 jnp.where(accept, tp_new, tp),
+                # Integer acceptance side-channel (telemetry only).
+                acc + accept.astype(jnp.int32),
             )
 
         def step(carry, xs):
@@ -441,8 +570,8 @@ def _jax_anneal_tp_fn(ack, k: int):
                 carry = swap(carry, i[r], j[r], th[r])
             return carry, None
 
-        carry0 = (P0, used0, cpu0, mem0, eg0, in0, rk0, an0, tp0)
+        carry0 = (P0, used0, cpu0, mem0, eg0, in0, rk0, an0, tp0, acc0)
         carry, _ = jax.lax.scan(step, carry0, (ii, jj, thresh))
-        return carry[0], carry[1], carry[2:8]
+        return carry[0], carry[1], carry[2:8], carry[9]
 
     return anneal

@@ -26,11 +26,12 @@ fragmented, so tasks greedy stranded may now fit.
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Mapping, Optional
 
 import numpy as np
 
+from ...obs import get_hub
+from ...obs import clock as obs_clock
 from ..assignment import Assignment
 from ..cluster import Cluster
 from ..engine import ArenaSelector, PlacementArena
@@ -171,19 +172,30 @@ class SearchScheduler(Scheduler):
     def schedule(
         self, topology: Topology, cluster: Cluster, *, commit: bool = True
     ) -> Assignment:
-        # repro-lint: allow(hot-loop) schedule_time_s is reporting metadata
-        # sampled once per schedule() call, outside the annealing loop;
+        # schedule_time_s is reporting metadata sampled once per schedule()
+        # call via the observability plane's justified wall-clock shim;
         # placements and objective values never depend on it.
-        t0 = time.perf_counter()
+        t0 = obs_clock.perf_counter()
+        hub = get_hub()
+        span = hub.span(
+            "search.schedule", topology=topology.id, objective=self.objective
+        )
+        with span:
+            out = self._schedule_phases(topology, cluster, span)
+        return self._finish(topology, cluster, out, commit, t0)
+
+    def _schedule_phases(self, topology: Topology, cluster: Cluster, span) -> Assignment:
+        hub = get_hub()
         topology.validate()
         # Greedy R-Storm seed on a fresh arena; avail0 (the pre-placement
         # ledger) is the capacity budget candidates are scored against.
-        arena = PlacementArena(cluster, topology, self.weights)
-        avail0 = arena.snapshot()
-        seed_assignment = Assignment(topology_id=topology.id)
-        greedy_scheduler = RStormScheduler(self.weights)
-        greedy_scheduler._place_on_arena(arena, topology, seed_assignment)
-        placements = dict(seed_assignment.placements)
+        with hub.span("search.seed"):
+            arena = PlacementArena(cluster, topology, self.weights)
+            avail0 = arena.snapshot()
+            seed_assignment = Assignment(topology_id=topology.id)
+            greedy_scheduler = RStormScheduler(self.weights)
+            greedy_scheduler._place_on_arena(arena, topology, seed_assignment)
+            placements = dict(seed_assignment.placements)
         out = Assignment(
             topology_id=topology.id,
             placements=placements,
@@ -191,29 +203,42 @@ class SearchScheduler(Scheduler):
         )
         recovered = False
         if len(placements) >= 2:
-            ba = BatchArena.from_arena(arena, topology, placements, avail0=avail0)
-            greedy_row = ba.encode(placements)
-            tm = (
-                compile_throughput(ba, topology, cluster)
-                if self.objective == "throughput"
-                else None
-            )
-            # Ordered re-seeds descend from the pre-placement budget, not
-            # from the ledger the greedy seed just consumed.
-            arena.rollback(avail0)
-            P0 = self._build_inits(
-                ba, arena, topology, cluster, greedy_row, greedy_scheduler
-            )
-            P = BatchAnnealer(ba, backend=self.backend).run(
-                P0, self.steps, self.seed, objective=self.objective, tm=tm,
-                multi_swap=self.multi_swap,
-            )
-            result = evaluate_batch(
-                ba, P, backend=self.backend, throughput_model=tm
-            )
-            greedy_eval = evaluate_batch(
-                ba, greedy_row, backend=self.backend, throughput_model=tm
-            )
+            with hub.span("search.compile") as sp:
+                ba = BatchArena.from_arena(
+                    arena, topology, placements, avail0=avail0
+                )
+                greedy_row = ba.encode(placements)
+                tm = (
+                    compile_throughput(ba, topology, cluster)
+                    if self.objective == "throughput"
+                    else None
+                )
+                sp.set(n_tasks=ba.n_tasks, n_nodes=ba.n_nodes)
+                # Ordered re-seeds descend from the pre-placement budget,
+                # not from the ledger the greedy seed just consumed.
+                arena.rollback(avail0)
+                P0 = self._build_inits(
+                    ba, arena, topology, cluster, greedy_row, greedy_scheduler
+                )
+            with hub.span("search.anneal") as sp:
+                sp.set(
+                    n_chains=int(P0.shape[0]),
+                    steps=self.steps,
+                    proposals=int(P0.shape[0]) * self.steps,
+                    backend=self.backend,
+                    multi_swap=self.multi_swap,
+                )
+                P = BatchAnnealer(ba, backend=self.backend).run(
+                    P0, self.steps, self.seed, objective=self.objective, tm=tm,
+                    multi_swap=self.multi_swap,
+                )
+            with hub.span("search.evaluate"):
+                result = evaluate_batch(
+                    ba, P, backend=self.backend, throughput_model=tm
+                )
+                greedy_eval = evaluate_batch(
+                    ba, greedy_row, backend=self.backend, throughput_model=tm
+                )
             if self.objective == "throughput":
                 candidate = self._pick_throughput_candidate(
                     ba, P, result, greedy_eval
@@ -242,7 +267,8 @@ class SearchScheduler(Scheduler):
             # fragmented — re-attempt the stranded tasks against its
             # residual budget.
             self._place_unassigned(arena, avail0, topology, out)
-        return self._finish(topology, cluster, out, commit, t0)
+        span.set(placed=len(out.placements), unassigned=len(out.unassigned))
+        return out
 
     def _pick_throughput_candidate(
         self, ba, P, result, greedy_eval

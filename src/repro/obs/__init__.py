@@ -1,0 +1,29 @@
+# Deterministic observability plane: a typed metric registry + span traces
+# shared by the DES executor, the batched search, and the Nimbus control
+# plane.  Everything is clocked on sim-time or explicit step counters so a
+# fixed seed yields byte-identical JSONL telemetry; ``obs.clock`` is the one
+# justified wall-clock shim (span durations, profiling only).
+from .hub import NULL_HUB, NULL_METRIC, NULL_SPAN, MetricsHub, Span, get_hub
+from .metrics import (
+    DEFAULT_BUCKETS,
+    QUEUE_DEPTH_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    Series,
+)
+
+__all__ = [
+    "MetricsHub",
+    "Span",
+    "get_hub",
+    "NULL_HUB",
+    "NULL_METRIC",
+    "NULL_SPAN",
+    "Counter",
+    "Gauge",
+    "Series",
+    "Histogram",
+    "DEFAULT_BUCKETS",
+    "QUEUE_DEPTH_BUCKETS",
+]

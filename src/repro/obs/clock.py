@@ -1,0 +1,25 @@
+"""The observability plane's single wall-clock shim.
+
+Everything exported by ``repro.obs`` is clocked on sim-time or explicit
+step counters so a fixed seed yields byte-identical telemetry.  The one
+legitimate consumer of wall time is the profiling hooks -- span
+``wall_s`` durations and the swaps/s rates derived from them -- and
+those route exclusively through this module so repro-lint's wall-clock
+rule can confine ``time.perf_counter`` to exactly one justified site in
+the instrumented tree.  Wall fields are excluded from JSONL export
+unless ``include_wall=True`` is passed, mirroring how scenario traces
+scrub ``schedule_time_s`` to keep goldens stable.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def perf_counter() -> float:
+    """Monotonic wall clock for span durations and scheduler timing.
+
+    Never feeds an exported golden: hub export drops wall fields by
+    default, and ``Assignment.schedule_time_s`` is scrubbed on replay.
+    """
+    return time.perf_counter()  # repro-lint: allow(hot-loop) the tree's one justified wall-clock site; profiling-only, excluded from exported goldens

@@ -1,0 +1,156 @@
+"""Typed metric primitives for the deterministic observability plane.
+
+Four metric kinds, all clocked on **sim-time or explicit step counters**
+-- never wall clock -- so a fixed seed yields byte-identical telemetry:
+
+- ``Counter``   monotone integer event counts (acks, drops, replays).
+- ``Gauge``     last-write-wins scalar (acceptance rate, final node util).
+- ``Series``    ``(t, value)`` points where ``t`` is sim-time seconds or a
+  step/swap index -- the time-series shape DRS-style reactive control
+  consumes.
+- ``Histogram`` raw-sample distribution with fixed bucket upper bounds.
+  Percentiles are **exact** -- ``np.percentile`` over the retained
+  samples, the identical code path ``DesReport`` uses -- and the fixed
+  ``le``-style buckets only shape the exported coarse view (they are
+  computed lazily, so ``observe`` stays a bare list append on the DES
+  hot path).
+
+Every metric renders itself to a plain JSON-safe dict via ``record()``;
+the ``MetricsHub`` (``repro.obs.hub``) owns naming, labels, and export.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: Generic latency-style upper bounds (seconds), roughly 1-2-5 per decade.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.0005, 0.001, 0.002, 0.005, 0.01, 0.02, 0.05,
+    0.1, 0.2, 0.5, 1.0, 2.0, 5.0,
+)
+
+#: Dyadic upper bounds for queue-depth style integer samples.
+QUEUE_DEPTH_BUCKETS: Tuple[float, ...] = (
+    0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0,
+)
+
+
+class Counter:
+    """Monotone integer event counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: int = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def record(self) -> Dict[str, object]:
+        return {"value": self.value}
+
+
+class Gauge:
+    """Last-write-wins scalar; ``value`` is ``None`` until first set."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Optional[float] = None
+
+    def set(self, value: float) -> None:
+        self.value = value
+
+    def record(self) -> Dict[str, object]:
+        return {"value": self.value}
+
+
+class Series:
+    """Ordered ``(t, value)`` points; ``t`` is sim-time or a step index."""
+
+    __slots__ = ("points",)
+
+    def __init__(self) -> None:
+        self.points: List[List[float]] = []
+
+    def append(self, t: float, value: float) -> None:
+        self.points.append([t, value])
+
+    def record(self) -> Dict[str, object]:
+        return {"points": self.points}
+
+
+class Histogram:
+    """Fixed-bucket histogram with exact percentile extraction.
+
+    Raw samples are retained (``observe`` is a bare append -- the DES
+    latency path budget is <5% overhead), so ``percentiles`` can return
+    the *exact* p50/p95/p99 rather than bucket-interpolated estimates;
+    ``bucket_counts`` bins the same samples against the fixed ``le``
+    upper bounds lazily at export time.
+    """
+
+    __slots__ = ("buckets", "values")
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS) -> None:
+        self.buckets: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        self.values: List[float] = []
+
+    def observe(self, value: float) -> None:
+        self.values.append(value)
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+    def percentiles(
+        self, qs: Sequence[float] = (50.0, 95.0, 99.0)
+    ) -> Tuple[Optional[float], ...]:
+        """Exact percentiles over the retained samples (``None`` when empty).
+
+        This is *the* percentile code path: ``DesReport`` latency and
+        queue-depth percentiles call it, and the JSONL export re-renders
+        the same values -- one implementation, pinned equal by test.
+        """
+        if not self.values:
+            return tuple(None for _ in qs)
+        arr = np.asarray(self.values, dtype=np.float64)
+        return tuple(float(v) for v in np.percentile(arr, list(qs)))
+
+    def mean(self) -> float:
+        if not self.values:
+            return 0.0
+        return math.fsum(self.values) / len(self.values)
+
+    def bucket_counts(self) -> List[int]:
+        """Per-bucket sample counts; the last slot is the +Inf overflow."""
+        if not self.values:
+            return [0] * (len(self.buckets) + 1)
+        arr = np.asarray(self.values, dtype=np.float64)
+        ub = np.asarray(self.buckets, dtype=np.float64)
+        idx = np.searchsorted(ub, arr, side="left")
+        counts = np.bincount(idx, minlength=len(self.buckets) + 1)
+        return [int(c) for c in counts]
+
+    def record(self) -> Dict[str, object]:
+        p50, p95, p99 = self.percentiles()
+        return {
+            "count": len(self.values),
+            "mean": self.mean(),
+            "p50": p50,
+            "p95": p95,
+            "p99": p99,
+            "buckets": list(self.buckets),
+            "bucket_counts": self.bucket_counts(),
+        }
+
+
+#: kind tag used in registry keys and JSONL records, per metric class.
+KIND_OF = {
+    Counter: "counter",
+    Gauge: "gauge",
+    Series: "series",
+    Histogram: "histogram",
+}

@@ -49,6 +49,7 @@ import numpy as np
 from ...core.assignment import Assignment
 from ...core.cluster import Cluster
 from ...core.topology import Topology
+from ...obs import QUEUE_DEPTH_BUCKETS, Histogram, get_hub
 from ..network import EMULAB_NETWORK, NetworkModel
 from ..simulator import (
     ACK_OVERHEAD_S,
@@ -164,6 +165,7 @@ class DesExecutor:
         thrash_factor: float = THRASH_FACTOR,
         ack_overhead_s: float = ACK_OVERHEAD_S,
         tuple_timeout_s: float = TUPLE_TIMEOUT_S,
+        hub=None,
     ):
         self.cluster = cluster
         self.network = network
@@ -171,6 +173,9 @@ class DesExecutor:
         self.thrash_factor = thrash_factor
         self.ack_overhead_s = ack_overhead_s
         self.tuple_timeout_s = tuple_timeout_s
+        # Explicit MetricsHub; None defers to the ambient hub at run time
+        # (NULL_HUB unless an activation — e.g. RunSettings.obs — is open).
+        self.hub = hub
 
     # -- public API -----------------------------------------------------------
     def run(self, topology: Topology, assignment: Assignment) -> DesReport:
@@ -337,12 +342,16 @@ class DesExecutor:
         self._created = [0] * n
         self._processed = [0] * n
         self._dropped = [0] * n
-        self._lat: List[List[float]] = [[] for _ in range(n)]
+        # Latency and queue-depth samples live in obs histograms whether or
+        # not a hub is active: DesReport percentiles and exported telemetry
+        # come from the same objects — one percentile code path (pinned
+        # equal by test), and ``observe`` is a bare append on the hot path.
+        self._hist_lat = [Histogram() for _ in range(n)]
         self._sink_est = [
             WindowedRateEstimator(cfg.duration_s, cfg.bucket_s)
             for _ in range(n)
         ]
-        self._qd_trace: List[List[int]] = [[] for _ in range(n)]
+        self._hist_qd = [Histogram(QUEUE_DEPTH_BUCKETS) for _ in range(n)]
         self._qd_max = [0] * n
         self.events_processed = 0
         self._t_end = cfg.duration_s
@@ -350,6 +359,16 @@ class DesExecutor:
         # windowed estimator and the exact counters cover the same span.
         warm = cfg.duration_s * cfg.warmup_frac
         self._warm = math.ceil(warm / cfg.bucket_s - 1e-9) * cfg.bucket_s
+        # Observability wiring: the enabled flag is a plain bool consulted
+        # once per sample tick and at report time — never per event — so a
+        # disabled (or absent) hub costs nothing in the event loop.
+        hub = self.hub if self.hub is not None else get_hub()
+        self._hub = hub
+        self._obs = hub.enabled
+        if self._obs:
+            for ti, (topo, _) in enumerate(self._scheduled):
+                hub.attach("des.latency_s", self._hist_lat[ti], topology=topo.id)
+                hub.attach("des.queue_depth", self._hist_qd[ti], topology=topo.id)
 
     # -- event loop -----------------------------------------------------------
     def _push(self, t: float, kind: int, payload) -> None:
@@ -520,7 +539,7 @@ class DesExecutor:
         if st.is_sink:
             self._sink_est[ti].add(t)
             if not st.acked and t >= self._warm:
-                self._lat[ti].append(t - root.t_emit)
+                self._hist_lat[ti].observe(t - root.t_emit)
         if st.acked:
             root.outstanding += children - 1
             if root.outstanding == 0 and root.state == 0:
@@ -612,7 +631,7 @@ class DesExecutor:
         self._open_roots[ti] -= 1
         st.sp_pending -= 1
         if t >= self._warm:
-            self._lat[ti].append(t - root.t_emit)
+            self._hist_lat[ti].observe(t - root.t_emit)
         self._pump(st, t)
 
     def _on_timeout(self, t: float, root: _Root) -> None:
@@ -640,11 +659,33 @@ class DesExecutor:
                 total += q
                 if q > mx:
                     mx = q
-            self._qd_trace[ti].append(total)
+            self._hist_qd[ti].observe(total)
             self._qd_max[ti] = mx
+        if self._obs:
+            self._sample_obs(t)
         nxt = t + self.config.bucket_s
         if nxt <= self._t_end:
             self._push(nxt, _SAMPLE, None)
+
+    def _sample_obs(self, t: float) -> None:
+        """Hub-enabled per-sample time series, all on sim-time: per-task
+        queue depth, cumulative drop/replay/ack counters, and running
+        per-node utilization (busy so far / sim-time so far)."""
+        hub = self._hub
+        for ti, (topo, _) in enumerate(self._scheduled):
+            tid = topo.id
+            for st in self._topo_tasks[ti]:
+                hub.series(
+                    "des.task_queue_depth", topology=tid, task=st.tid
+                ).append(t, len(st.queue))
+            hub.series("des.dropped", topology=tid).append(t, self._dropped[ti])
+            hub.series("des.replayed", topology=tid).append(t, self._replayed[ti])
+            hub.series("des.acked", topology=tid).append(t, self._acked[ti])
+        for nid in sorted(self._nodes):
+            nd = self._nodes[nid]
+            hub.series("des.node_utilization", node=nid).append(
+                t, min(nd.busy_time / t, 1.0) if t > 0.0 else 0.0
+            )
 
     def _walk_in_flight(self) -> List[int]:
         """Independent tuple census at drain (the conservation referee):
@@ -673,16 +714,10 @@ class DesExecutor:
         walked = self._walk_in_flight()
         out: Dict[str, DesReport] = {}
         for ti, (topo, _) in enumerate(self._scheduled):
-            lats = self._lat[ti]
-            if lats:
-                arr = np.asarray(lats, dtype=np.float64)
-                p50, p95, p99 = (
-                    float(v) for v in np.percentile(arr, [50.0, 95.0, 99.0])
-                )
-                mean_lat = math.fsum(lats) / len(lats)
-            else:
-                p50 = p95 = p99 = None
-                mean_lat = 0.0
+            hist = self._hist_lat[ti]
+            p50, p95, p99 = hist.percentiles()
+            mean_lat = hist.mean()
+            qd50, qd95, qd99 = self._hist_qd[ti].percentiles()
             used = sorted({st.node.nid for st in self._topo_tasks[ti]})
             node_util = {
                 nid: min(self._nodes[nid].busy_time / self._t_end, 1.0)
@@ -719,13 +754,38 @@ class DesExecutor:
                 tuples_dropped=self._dropped[ti],
                 tuples_in_flight=walked[ti],
                 queue_depth_max=self._qd_max[ti],
-                queue_depth_trace=list(self._qd_trace[ti]),
+                queue_depth_trace=list(self._hist_qd[ti].values),
                 sink_rate_trace=self._sink_est[ti].rates(),
                 sim_time_s=self._t_end,
                 warmup_s=self._warm,
                 events_processed=self.events_processed,
+                p50_queue_depth=qd50,
+                p95_queue_depth=qd95,
+                p99_queue_depth=qd99,
             )
+            if self._obs:
+                self._publish_report_obs(topo.id, out[topo.id])
         return out
+
+    def _publish_report_obs(self, tid: str, rep: DesReport) -> None:
+        """End-of-run totals into the hub (counters/gauges + sink-rate
+        series on bucket sim-time), complementing the attached histograms."""
+        hub = self._hub
+        hub.counter("des.emitted", topology=tid).inc(rep.emitted)
+        hub.counter("des.acked", topology=tid).inc(rep.acked)
+        hub.counter("des.failed", topology=tid).inc(rep.failed)
+        hub.counter("des.replayed", topology=tid).inc(rep.replayed)
+        hub.counter("des.dropped", topology=tid).inc(rep.tuples_dropped)
+        hub.gauge("des.sink_throughput", topology=tid).set(rep.sink_throughput)
+        hub.gauge("des.spout_rate", topology=tid).set(rep.spout_rate)
+        hub.gauge("des.events_processed").set(self.events_processed)
+        for nid in sorted(rep.node_cpu_utilization):
+            hub.gauge("des.node_utilization", node=nid).set(
+                rep.node_cpu_utilization[nid]
+            )
+        sr = hub.series("des.sink_rate", topology=tid)
+        for i, rate in enumerate(rep.sink_rate_trace):
+            sr.append(i * self.config.bucket_s, rate)
 
 
 def run_des(

@@ -54,6 +54,12 @@ class DesReport:
     sim_time_s: float
     warmup_s: float
     events_processed: int
+    # -- queue-depth distribution (per-bucket Σ-queued samples) ------------
+    # Extracted from the same ``repro.obs`` Histogram the telemetry export
+    # renders, so report and JSONL percentiles share one code path.
+    p50_queue_depth: Optional[float] = None
+    p95_queue_depth: Optional[float] = None
+    p99_queue_depth: Optional[float] = None
 
     def throughput_per_10s(self) -> float:
         """Paper's y-axis unit (tuples/10sec)."""

@@ -1,39 +1,53 @@
 """StatisticServer (paper §5.1): throughput on a task, component, and topology
-level, plus EWMA service times feeding the straggler mitigator."""
+level, plus EWMA service times feeding the straggler mitigator.
+
+Consolidated onto the ``repro.obs`` registry: tuple counts and service-time
+EWMAs live in a private always-on ``MetricsHub`` (counter ``stream.tuples``
+and gauge ``stream.service_ewma_s``, both labeled by task), so the threaded
+executor's live statistics and the deterministic telemetry plane share one
+metric vocabulary and export path.  Wall-clock throughput windows go through
+``obs.clock`` — the tree's single sanctioned wall-clock shim — because a
+threaded executor measures real elapsed time by design.
+"""
 
 from __future__ import annotations
 
 import collections
 import threading
-import time
 from typing import Dict, Optional
+
+from ..obs import MetricsHub
+from ..obs import clock as obs_clock
 
 
 class StatisticServer:
     def __init__(self, ewma_alpha: float = 0.2):
         self._lock = threading.Lock()
-        self._counts: Dict[str, int] = collections.defaultdict(int)
-        self._service_ewma: Dict[str, float] = {}
         self._alpha = ewma_alpha
-        self._t0 = time.perf_counter()
+        #: Always-on private hub; ``hub.records()``/``hub.export()`` expose
+        #: the live counters in the same JSONL form the rest of the tree emits.
+        self.hub = MetricsHub()
+        self._t0 = obs_clock.perf_counter()
 
     # -- recording ---------------------------------------------------------------
     def record_tuple(self, task_id: str, service_time_s: Optional[float] = None) -> None:
         with self._lock:
-            self._counts[task_id] += 1
+            self.hub.counter("stream.tuples", task=task_id).inc()
             if service_time_s is not None:
-                prev = self._service_ewma.get(task_id)
+                ewma = self.hub.gauge("stream.service_ewma_s", task=task_id)
+                prev = ewma.value
                 if prev is None:
-                    self._service_ewma[task_id] = service_time_s
+                    ewma.set(service_time_s)
                 else:
-                    self._service_ewma[task_id] = (
-                        self._alpha * service_time_s + (1 - self._alpha) * prev
-                    )
+                    ewma.set(self._alpha * service_time_s + (1 - self._alpha) * prev)
 
     # -- queries -------------------------------------------------------------------
     def task_counts(self) -> Dict[str, int]:
         with self._lock:
-            return dict(self._counts)
+            return {
+                labels["task"]: metric.value
+                for labels, metric in self.hub.find("counter", "stream.tuples")
+            }
 
     def component_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = collections.defaultdict(int)
@@ -47,11 +61,15 @@ class StatisticServer:
 
     def service_times(self) -> Dict[str, float]:
         with self._lock:
-            return dict(self._service_ewma)
+            return {
+                labels["task"]: metric.value
+                for labels, metric in self.hub.find("gauge", "stream.service_ewma_s")
+                if metric.value is not None
+            }
 
     def throughput(self, task_prefix: str = "") -> float:
         """Tuples/s since start for tasks matching the prefix."""
-        dt = max(time.perf_counter() - self._t0, 1e-9)
+        dt = max(obs_clock.perf_counter() - self._t0, 1e-9)
         return (
             sum(n for t, n in self.task_counts().items() if t.startswith(task_prefix))
             / dt
@@ -59,6 +77,5 @@ class StatisticServer:
 
     def reset(self) -> None:
         with self._lock:
-            self._counts.clear()
-            self._service_ewma.clear()
-            self._t0 = time.perf_counter()
+            self.hub = MetricsHub()
+            self._t0 = obs_clock.perf_counter()

@@ -32,6 +32,7 @@ HARNESS = "benchmarks/fixture_bench.py"
 KERNEL = "src/repro/kernels/fixture_kernel.py"  # accelerator kernels (f32 ok)
 SEARCH_KERNEL = "src/repro/core/search/kernels/fixture_kernel.py"
 DES = "src/repro/stream/des/fixture_engine.py"
+OBS = "src/repro/obs/fixture_obs.py"
 OUTSIDE = "tools/fixture_tool.py"
 
 
@@ -82,6 +83,18 @@ def test_zone_rule_sets():
     des = set(rules_for_path(DES))
     assert des == core
     assert "hot-loop" not in des and "pallas-interpret" not in des
+    # The observability plane: byte-identical-JSONL contract => core
+    # determinism rules, plus hot-loop so wall-clock reads stay confined
+    # to the single allow-listed shim in obs/clock.py.  No jax in obs.
+    obs = set(rules_for_path(OBS))
+    assert {
+        "unseeded-random",
+        "iter-order",
+        "float-sum",
+        "np-reduce-dtype",
+        "hot-loop",
+    } == obs
+    assert "jax-purity" not in obs and "float32-literal" not in obs
 
 
 def test_des_zone_catches_unseeded_stream():
@@ -102,6 +115,37 @@ def test_des_zone_catches_unseeded_stream():
     assert "unseeded-random" not in rules_hit(seeded, DES)
 
 
+def test_obs_zone_catches_wall_clock_read():
+    # A bare wall-clock read in the telemetry plane would leak wall time
+    # into exported metrics and break the byte-identical-JSONL goldens.
+    src = """
+        import time
+        def span_duration(t_enter):
+            return time.perf_counter() - t_enter
+    """
+    assert "hot-loop" in rules_hit(src, OBS)
+    # ...and the sanctioned shim pattern: a same-line justified allow, which
+    # is exactly how obs/clock.py confines the tree's one wall-clock site.
+    shim = (
+        "import time\n"
+        "def perf_counter():\n"
+        "    return time.perf_counter()  # repro-lint: allow(hot-loop) shim\n"
+    )
+    kept, suppressed = lint_source(shim, OBS)
+    assert kept == []
+    assert [v.rule for v in suppressed] == ["hot-loop"]
+
+
+def test_obs_zone_catches_float_sum_and_unseeded_random():
+    src = """
+        import numpy as np
+        def summarize(values):
+            rng = np.random.default_rng()
+            return sum(values), rng
+    """
+    assert rules_hit(src, OBS) == {"float-sum", "unseeded-random"}
+
+
 def test_outside_zone_is_never_linted():
     assert violations_of("import random\nrandom.random()\n", OUTSIDE) == []
 
@@ -113,6 +157,7 @@ def test_all_registered_rules_are_reachable_from_some_zone():
         | set(rules_for_path(HARNESS))
         | set(rules_for_path(KERNEL))
         | set(rules_for_path(SEARCH_KERNEL))
+        | set(rules_for_path(OBS))
     )
     assert reachable == set(RULES)
 

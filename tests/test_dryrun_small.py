@@ -5,6 +5,7 @@ Runs in a subprocess because XLA_FLAGS must be set before jax initializes.
 """
 
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -12,6 +13,16 @@ import textwrap
 import pytest
 
 pytest.importorskip("jax")  # the subprocess under test imports jax
+
+
+def _env():
+    # Hermetic except for the platform pin: without JAX_PLATFORMS the
+    # subprocess's jax import can hang probing for accelerator backends
+    # on hosts that set it for exactly that reason.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    return env
 
 SCRIPT = textwrap.dedent(
     """
@@ -66,7 +77,7 @@ def test_small_mesh_dryrun_compiles_all_kinds():
         capture_output=True,
         text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env=_env(),
         cwd=".",
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

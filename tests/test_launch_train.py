@@ -1,12 +1,23 @@
 """Integration test for the distributed launcher: planner-driven sharded
 training on forced host devices, with checkpoint-resume (fault tolerance)."""
 
+import os
 import subprocess
 import sys
 
 import pytest
 
 pytest.importorskip("jax")  # the subprocess under test imports jax
+
+
+def _env():
+    # Hermetic except for the platform pin: without JAX_PLATFORMS the
+    # subprocess's jax import can hang probing for accelerator backends
+    # on hosts that set it for exactly that reason.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    if "JAX_PLATFORMS" in os.environ:
+        env["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
+    return env
 
 
 def _run(extra, ckpt):
@@ -20,7 +31,7 @@ def _run(extra, ckpt):
         capture_output=True,
         text=True,
         timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env=_env(),
         cwd=".",
     )
 
