@@ -1,0 +1,115 @@
+"""Reconfiguration-plane quality benchmark: greedy vs search-mode rebalance.
+
+Two deterministic timelines, replayed once per reconfig mode through the
+same ``ScenarioRunner``:
+
+* ``rebalance_failover`` — PageLoad on emulab_12 loses two workers, then
+  rebalances; the paper's §3 recovery path.  ``sim_tp`` is the final
+  steady-state sink throughput, ``moved_count`` the number of migrated
+  tasks (search pays extra moves only when the simulated-never-worse guard
+  says they buy throughput).
+* ``rebalance_hotspot`` — a ``LoadChangeEvent`` makes one PageLoad
+  component 4x more expensive mid-run; greedy has nothing orphaned to
+  patch (the placement is stale, not broken), search re-optimizes under
+  the migration penalty.
+
+Both ``sim_tp`` (higher is better) and ``moved_count`` (lower is better)
+are pure functions of fixed seeds and feed the bench-regression gate;
+wall-clock timing is reported but exempt.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.api import (
+    LoadChangeEvent,
+    NodeFailEvent,
+    RebalanceEvent,
+    ScenarioRunner,
+    ScenarioSpec,
+    SchedulerSpec,
+    SubmitEvent,
+)
+from repro.stream import topologies
+
+from .common import EMULAB_12, EMULAB_24, emit_csv_row, timed
+
+#: (label, reconfig mode, reconfig kwargs) — the rebalance comparison matrix.
+MODES = [
+    ("greedy", "greedy", None),
+    (
+        "search",
+        "search",
+        {"seed": 0, "n_chains": 16, "steps": 600, "move_cost": 0.25},
+    ),
+    ("search_budget", "search", {"seed": 0, "budget_s": 0.1}),
+]
+
+
+def failover_scenario() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="rebalance_failover",
+        cluster=EMULAB_12,
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            NodeFailEvent(node_id="r0n1"),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def hotspot_scenario() -> ScenarioSpec:
+    return ScenarioSpec(
+        name="rebalance_hotspot",
+        cluster=EMULAB_24,
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            LoadChangeEvent(
+                topology_id="pageload", component_id="geo_enrich", factor=4.0
+            ),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def _final_tp(trace) -> float:
+    return trace.final().topologies["pageload"]["sink_throughput"]
+
+
+def _moved(trace) -> int:
+    return sum(
+        len(v) for v in trace.final().outcome.get("moved", {}).values()
+    )
+
+
+def run(smoke: bool = False) -> Dict[str, object]:
+    out: Dict[str, object] = {}
+    for scenario_fn in (failover_scenario, hotspot_scenario):
+        spec = scenario_fn()
+        for label, mode, kwargs in MODES:
+            trace, secs = timed(
+                ScenarioRunner(
+                    spec, reconfig=mode, reconfig_kwargs=kwargs
+                ).run,
+                repeat=1,
+            )
+            out[f"{spec.name}/{label}"] = trace
+            emit_csv_row(
+                f"{spec.name}/{label}",
+                secs * 1e6,
+                f"sim_tp={_final_tp(trace):.1f}tuples/s;"
+                f"moved_count={_moved(trace)}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -5,9 +5,9 @@ against the committed ``BENCH_baseline.json`` and fails on a >20% regression
 in any *deterministic quality* metric parsed from the rows' ``derived``
 fields:
 
-* lower-is-better: ``netcost``;
-* higher-is-better: ``sink_tp``, ``tp``, ``spearman``, ``greedy_tp``,
-  ``tp_initial``, ``tp_final``, ``tp_recovered``.
+* lower-is-better: ``netcost``, ``moved_count``;
+* higher-is-better: ``sink_tp``, ``sim_tp``, ``tp``, ``spearman``,
+  ``greedy_tp``, ``tp_initial``, ``tp_final``, ``tp_recovered``.
 
 Wall-clock columns (``us_per_call``, ``cand_per_s``) are deliberately NOT
 gated — they are machine-dependent; the scheduler-overhead budget gate owns
@@ -33,9 +33,10 @@ import sys
 
 TOLERANCE = 0.20
 
-LOWER_IS_BETTER = ("netcost",)
+LOWER_IS_BETTER = ("netcost", "moved_count")
 HIGHER_IS_BETTER = (
     "sink_tp",
+    "sim_tp",
     "tp",
     "spearman",
     "greedy_tp",

@@ -21,6 +21,7 @@ BENCHES = [
     "benchmarks.bench_yahoo",            # Fig 12
     "benchmarks.bench_multi_topology",   # Fig 13
     "benchmarks.bench_scenarios",        # §3/§6.5 dynamic scenario timelines
+    "benchmarks.bench_rebalance",        # greedy vs search reconfiguration
     "benchmarks.bench_des",              # packet-level referee fidelity+scale
     "benchmarks.bench_scheduler_overhead",
     "benchmarks.bench_search",           # batched placement search vs greedy
@@ -32,6 +33,7 @@ SMOKE_BENCHES = [
     "benchmarks.bench_network_bound",
     "benchmarks.bench_yahoo",
     "benchmarks.bench_scenarios",   # failure/churn/scale-up timelines (~3 s)
+    "benchmarks.bench_rebalance",   # greedy vs search reconfiguration
     "benchmarks.bench_des",         # DES fidelity vs solver (~2 s)
     "benchmarks.bench_search",      # tiny budget: 8 chains × 50 steps
 ]

@@ -65,7 +65,11 @@ ZONES: Tuple[Zone, ...] = (
     # float64-only exactness contract apply.
     Zone(
         name="hot-loop",
-        anchors=("repro/core/engine", "repro/core/search"),
+        anchors=(
+            "repro/core/engine",
+            "repro/core/search",
+            "repro/core/reconfig",
+        ),
         rules=("hot-loop", "float32-literal"),
         set_attrs=SET_ATTRS,
     ),

@@ -10,12 +10,20 @@ declarative topology + cluster description into a placement).
 * ``fail_node(node_id)`` — mark a worker dead, reporting its orphans;
 * ``add_nodes(specs)``  — elastic scale-up, re-placing unassigned tasks;
 * ``rebalance()``     — re-place orphaned/unassigned tasks (paper §3);
+* ``change_load(topology_id, component_id, factor)`` — mid-run load shift;
 * ``migrate_stragglers(service_times)`` — DESIGN.md §5 mitigation;
 * ``apply(event)``    — dispatch one typed scenario event (the event-sourced
   timeline entry point used by ``repro.api.scenario.ScenarioRunner``).
 
 Both plan and submit return a ``SchedulingPlan`` report: placements,
 unassigned tasks, per-node utilization, network cost and schedule time.
+
+Rebalancing verbs route through ``core.reconfig.ReconfigEngine``:
+``Nimbus(..., reconfig="greedy")`` (the default) replays the historical
+greedy orphan patch-up bit-identically; ``reconfig="search"`` adds a
+migration-aware annealing pass that only commits simulated-never-worse
+placements (``reconfig_kwargs`` are validated against
+``core.reconfig.RECONFIG_SCHEMAS``).
 """
 
 from __future__ import annotations
@@ -26,8 +34,9 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from ..core.assignment import Assignment
 from ..core.cluster import Cluster
 from ..core.multitopology import GlobalState
+from ..core.reconfig import ReconfigEngine, validate_reconfig
 from ..core.registry import get_scheduler
-from ..core.rescheduler import RebalanceResult, Rescheduler, StragglerMitigator
+from ..core.rescheduler import RebalanceResult, StragglerMitigator
 from ..core.resources import BANDWIDTH, CPU, MEMORY
 from ..core.topology import Topology
 from ..obs import MetricsHub, get_hub
@@ -197,11 +206,25 @@ class Nimbus:
         self,
         cluster: Union[Cluster, ClusterSpec, None] = None,
         hub: Optional[MetricsHub] = None,
+        reconfig: str = "greedy",
+        reconfig_kwargs: Optional[Mapping[str, Any]] = None,
     ):
         #: Explicit telemetry hub.  When None, each plan/submit consults the
         #: payload's ``settings.obs`` (fresh hub per call when enabled) and
         #: otherwise inherits whatever hub is ambient via ``obs.get_hub``.
         self.hub = hub
+        #: How rebalance/scale-up re-place tasks: ``"greedy"`` is the
+        #: orphan patch-up (bit-identical to the historical Rescheduler),
+        #: ``"search"`` runs the greedy pass and then a migration-aware
+        #: anneal over (migration set × placement), committing only
+        #: simulated-never-worse candidates.
+        errors = validate_reconfig(reconfig, reconfig_kwargs)
+        if errors:
+            raise PayloadValidationError(errors)
+        self._reconfig_mode = reconfig
+        self._reconfig_kwargs = (
+            dict(reconfig_kwargs) if reconfig_kwargs is not None else None
+        )
         self._cluster_spec: Optional[ClusterSpec] = None
         #: Soft-constraint weights used by rebalance/migration (Alg 4's user
         #: weights); updated by ``set_weights`` / a ``WeightsChangeEvent``.
@@ -404,7 +427,7 @@ class Nimbus:
                 f"unknown node {node_id!r}; have "
                 f"{sorted(self.state.cluster.nodes) if self.state else []}"
             )
-        return self.state.fail_node(node_id)
+        return self._reconfig().fail_node(node_id)
 
     def add_nodes(self, node_specs: Sequence[Any], weights=None) -> RebalanceResult:
         """Elastic scale-up: join fresh nodes, then re-place any unassigned
@@ -418,9 +441,7 @@ class Nimbus:
             n.to_node_spec() if hasattr(n, "to_node_spec") else n
             for n in node_specs
         ]
-        result = Rescheduler(
-            self.state, weights if weights is not None else self._weights
-        ).handle_scale_up(specs)
+        result = self._reconfig(weights).handle_scale_up(specs)
         # The live node set changed; keep the recorded spec in sync so later
         # payload-vs-cluster mismatch checks compare against reality.
         self._cluster_spec = ClusterSpec.from_cluster(self.state.cluster)
@@ -434,14 +455,60 @@ class Nimbus:
         if self.state is None:
             return RebalanceResult()
         hub = self.hub if self.hub is not None else get_hub()
-        with hub.activate(), hub.span("nimbus.rebalance") as span:
-            result = Rescheduler(
-                self.state, weights if weights is not None else self._weights
-            ).rebalance()
+        with hub.activate(), hub.span(
+            "nimbus.rebalance", mode=self._reconfig_mode
+        ) as span:
+            result = self._reconfig(weights).rebalance()
             span.set(
                 moved=result.moved_count(), unplaced=result.unplaced_count()
             )
         return result
+
+    def _reconfig(self, weights=None) -> ReconfigEngine:
+        """The reconfiguration engine for one lifecycle verb (stateless
+        between calls — it reads the live GlobalState each time)."""
+        return ReconfigEngine(
+            self.state,
+            weights if weights is not None else self._weights,
+            mode=self._reconfig_mode,
+            kwargs=self._reconfig_kwargs,
+        )
+
+    def change_load(
+        self, topology_id: str, component_id: str, factor: float
+    ) -> Dict[str, Any]:
+        """Mid-run load shift: multiply ``component_id``'s per-tuple CPU
+        cost by ``factor`` (> 1 makes each tuple ``factor``× more expensive
+        to process, shrinking the component's service rate).
+
+        Only the *behavioural* cost changes — the declared ``cpu_load``
+        demand the node ledger was charged with stays put, so committed
+        placements and capacity bookkeeping are untouched.  Simulations run
+        after this call see the new cost; a rebalance (reactive or scripted)
+        is how the placement catches up.
+        """
+        from ..stream.simulator import _cpu_cost  # local: stream imports api
+
+        if self.state is None or topology_id not in self.state.topologies:
+            raise KeyError(
+                f"unknown topology {topology_id!r}; submitted: {self.topologies}"
+            )
+        topology = self.state.topologies[topology_id]
+        comp = topology.components.get(component_id)
+        if comp is None:
+            raise KeyError(
+                f"unknown component {component_id!r} in topology "
+                f"{topology_id!r}; have {sorted(topology.components)}"
+            )
+        if not isinstance(factor, (int, float)) or factor <= 0:
+            raise ValueError(f"factor must be > 0, got {factor!r}")
+        comp.cpu_cost_per_tuple = _cpu_cost(comp) * float(factor)
+        return {
+            "topology_id": topology_id,
+            "component_id": component_id,
+            "factor": float(factor),
+            "cpu_cost_per_tuple": comp.cpu_cost_per_tuple,
+        }
 
     def migrate_stragglers(
         self,
@@ -610,6 +677,11 @@ class Nimbus:
         self.set_weights(dict(event.weights))
         return {"weights": dict(event.weights)}
 
+    def _apply_load_change(self, event) -> Dict[str, Any]:
+        return self.change_load(
+            event.topology_id, event.component_id, event.factor
+        )
+
     #: event kind -> handler; kinds match ``repro.api.scenario.EVENT_TYPES``.
     _APPLY = {
         "submit": _apply_submit,
@@ -619,4 +691,5 @@ class Nimbus:
         "rebalance": _apply_rebalance,
         "straggler_report": _apply_straggler_report,
         "weights_change": _apply_weights_change,
+        "load_change": _apply_load_change,
     }

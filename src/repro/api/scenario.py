@@ -7,7 +7,8 @@ way a single scheduling request became a ``SchedulingPayload``:
 
 * a ``ScenarioSpec`` is a validated, JSON-round-trippable ordered timeline of
   typed events (submit / kill / node_fail / node_join / rebalance /
-  straggler_report / weights_change) over a declarative ``ClusterSpec``;
+  straggler_report / weights_change / load_change) over a declarative
+  ``ClusterSpec``;
 * a ``ScenarioRunner`` replays the timeline through the single
   ``Nimbus.apply(event)`` dispatcher, re-simulating joint steady state after
   every step (warm-started from the previous interval's rates);
@@ -300,6 +301,59 @@ class WeightsChangeEvent:
         return cls(weights=dict(weights or {}))
 
 
+@dataclasses.dataclass(frozen=True)
+class LoadChangeEvent:
+    """Mid-run load shift: multiply one component's per-tuple CPU cost by
+    ``factor`` (> 1 = each tuple gets more expensive, shrinking that
+    component's service rate).  The declared placement demand is untouched
+    — this models the *workload* drifting under a fixed schedule, the
+    situation a reactive rebalance exists to repair."""
+
+    kind: ClassVar[str] = "load_change"
+    topology_id: str
+    component_id: str
+    factor: float
+
+    _FIELDS = ("kind", "topology_id", "component_id", "factor")
+
+    def validate(self, path: str) -> List[str]:
+        errors: List[str] = []
+        for key in ("topology_id", "component_id"):
+            v = getattr(self, key)
+            if not isinstance(v, str) or not v:
+                errors.append(
+                    f"{path}.{key}: must be a non-empty string, got {v!r}"
+                )
+        if (
+            isinstance(self.factor, bool)
+            or not isinstance(self.factor, (int, float))
+            or self.factor <= 0
+        ):
+            errors.append(
+                f"{path}.factor: must be a number > 0, got {self.factor!r}"
+            )
+        return errors
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "topology_id": self.topology_id,
+            "component_id": self.component_id,
+            "factor": self.factor,
+        }
+
+    @classmethod
+    def from_dict(
+        cls, d: Mapping, path: str, errors: List[str]
+    ) -> "LoadChangeEvent":
+        _check_keys(d, path, cls._FIELDS, errors)
+        return cls(
+            topology_id=_get(d, "topology_id", (str,), path, errors, default=""),
+            component_id=_get(d, "component_id", (str,), path, errors, default=""),
+            factor=_get(d, "factor", (float,), path, errors, default=1.0),
+        )
+
+
 #: kind -> event class; the same kinds ``Nimbus.apply`` dispatches on.
 EVENT_TYPES = {
     cls.kind: cls
@@ -311,6 +365,7 @@ EVENT_TYPES = {
         RebalanceEvent,
         StragglerReportEvent,
         WeightsChangeEvent,
+        LoadChangeEvent,
     )
 }
 
@@ -368,6 +423,8 @@ class ScenarioSpec:
             known_nodes = set(self.cluster.to_cluster().nodes)
         dead_nodes: set = set()
         live_topologies: set = set()
+        #: live topology id -> its component ids (for load-change checks).
+        live_components: Dict[str, set] = {}
         for i, event in enumerate(self.timeline):
             path = f"timeline[{i}]"
             if not hasattr(event, "kind") or event.kind not in EVENT_TYPES:
@@ -385,6 +442,9 @@ class ScenarioSpec:
                         "first or choose a different id"
                     )
                 live_topologies.add(event.topology.id)
+                live_components[event.topology.id] = {
+                    c.id for c in event.topology.components
+                }
             elif isinstance(event, KillEvent):
                 if event.topology_id not in live_topologies:
                     errors.append(
@@ -393,6 +453,25 @@ class ScenarioSpec:
                         f"(live: {sorted(live_topologies)})"
                     )
                 live_topologies.discard(event.topology_id)
+                live_components.pop(event.topology_id, None)
+            elif isinstance(event, LoadChangeEvent):
+                if event.topology_id not in live_topologies:
+                    errors.append(
+                        f"{path}.topology_id: {event.topology_id!r} is not "
+                        "submitted at this point in the timeline "
+                        f"(live: {sorted(live_topologies)})"
+                    )
+                elif (
+                    event.topology_id in live_components
+                    and event.component_id
+                    not in live_components[event.topology_id]
+                ):
+                    errors.append(
+                        f"{path}.component_id: unknown component "
+                        f"{event.component_id!r} in topology "
+                        f"{event.topology_id!r} (have "
+                        f"{sorted(live_components[event.topology_id])})"
+                    )
             elif isinstance(event, NodeFailEvent) and known_nodes:
                 if event.node_id not in known_nodes:
                     errors.append(
@@ -544,6 +623,22 @@ class ScenarioTrace:
 # -- the runner ------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ReactiveRebalanceMarker:
+    """Synthetic trace marker for a policy-triggered rebalance.
+
+    Not a timeline event — it cannot be authored into a ``ScenarioSpec``
+    (it's absent from ``EVENT_TYPES``); it appears in traces only when a
+    ``ReconfigPolicy`` fires, recording which timeline step's observations
+    triggered it."""
+
+    trigger_step: int
+    kind: ClassVar[str] = "reactive_rebalance"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "trigger_step": self.trigger_step}
+
+
 class ScenarioRunner:
     """Replay a ``ScenarioSpec`` through one ``Nimbus``, re-simulating joint
     steady state after every event.
@@ -564,6 +659,16 @@ class ScenarioRunner:
     ``scenario.machines_used``, ``scenario.alive_nodes``) alongside whatever
     the scheduler/referee record under the same hub.  The trace itself is
     unchanged — telemetry rides next to it, never inside it.
+
+    ``reconfig``/``reconfig_kwargs`` select how the replayed Nimbus
+    re-places tasks on rebalance/join (``"greedy"`` default — existing
+    traces replay bit-identically; ``"search"`` anneals migration ×
+    placement).  ``policy`` opts into DRS-style reactive reconfiguration: a
+    ``core.reconfig.ReconfigPolicy`` observed against the hub after every
+    step; when it fires, the runner rebalances, re-simulates, and appends a
+    ``reactive_rebalance`` entry to the trace.  The policy reads the DES
+    executor's utilization/queue series, so it needs ``engine="des"`` and
+    an enabled hub to ever trigger.
     """
 
     def __init__(
@@ -573,14 +678,27 @@ class ScenarioRunner:
         engine: str = "solver",
         des=None,
         hub: Optional[MetricsHub] = None,
+        reconfig: str = "greedy",
+        reconfig_kwargs: Optional[Mapping[str, Any]] = None,
+        policy=None,
     ):
+        from ..core.reconfig import validate_reconfig
+
         if engine not in ("solver", "des"):
             raise ValueError(f"engine must be 'solver' or 'des', got {engine!r}")
+        errors = validate_reconfig(reconfig, reconfig_kwargs)
+        if errors:
+            raise PayloadValidationError(errors)
         self.spec = spec.validate()
         self.warm_start = warm_start
         self.engine = engine
         self.des = des
         self.hub = hub
+        self.reconfig = reconfig
+        self.reconfig_kwargs = (
+            dict(reconfig_kwargs) if reconfig_kwargs is not None else None
+        )
+        self.policy = policy
 
     def run(self) -> ScenarioTrace:
         hub = self.hub if self.hub is not None else get_hub()
@@ -588,7 +706,11 @@ class ScenarioRunner:
             return self._run(hub)
 
     def _run(self, hub: MetricsHub) -> ScenarioTrace:
-        nimbus = Nimbus(self.spec.cluster)
+        nimbus = Nimbus(
+            self.spec.cluster,
+            reconfig=self.reconfig,
+            reconfig_kwargs=self.reconfig_kwargs,
+        )
         trace = ScenarioTrace(scenario=self.spec.name)
         rates: Dict[str, float] = {}
         for step, event in enumerate(self.spec.timeline):
@@ -612,6 +734,27 @@ class ScenarioRunner:
             trace.entries.append(entry)
             if hub.enabled:
                 self._record_obs(hub, entry)
+            if self.policy is not None and self.policy.observe(hub):
+                # Reactive reconfiguration: the observed interval looked
+                # imbalanced for long enough — rebalance now, re-simulate,
+                # and record the extra interval.  The marker shares the
+                # triggering step number so trace consumers can line the
+                # pair up against the timeline.
+                marker = ReactiveRebalanceMarker(trigger_step=step)
+                with hub.span(
+                    "scenario.reactive_rebalance", step=step
+                ):
+                    outcome = nimbus.rebalance().to_dict()
+                    sims = nimbus.simulate_all(
+                        warm_start=rates if self.warm_start else None,
+                        engine=self.engine,
+                        des=self.des,
+                    )
+                rates = {tid: r.spout_rate for tid, r in sims.items()}
+                entry = self._entry(step, marker, outcome, nimbus, sims)
+                trace.entries.append(entry)
+                if hub.enabled:
+                    self._record_obs(hub, entry)
         return trace
 
     def _record_obs(self, hub: MetricsHub, entry: "ScenarioTraceEntry") -> None:
@@ -684,8 +827,18 @@ def run_scenario(
     engine: str = "solver",
     des=None,
     hub: Optional[MetricsHub] = None,
+    reconfig: str = "greedy",
+    reconfig_kwargs: Optional[Mapping[str, Any]] = None,
+    policy=None,
 ) -> ScenarioTrace:
     """One-shot convenience: validate + replay a scenario."""
     return ScenarioRunner(
-        spec, warm_start=warm_start, engine=engine, des=des, hub=hub
+        spec,
+        warm_start=warm_start,
+        engine=engine,
+        des=des,
+        hub=hub,
+        reconfig=reconfig,
+        reconfig_kwargs=reconfig_kwargs,
+        policy=policy,
     ).run()

@@ -1,0 +1,25 @@
+# Reconfiguration plane: rebalance-after-failure as a first-class search
+# problem.  The greedy orphan patch-up (core.rescheduler) stays the default
+# and the bit-identical baseline; `mode="search"` seeds the batch annealer
+# from the current assignment and searches (migration set × placement)
+# jointly, trading throughput/netcost gains against per-task migration
+# penalties, with a simulated never-worse-than-greedy guarantee.  The
+# DRS-style ReconfigPolicy turns observed queue/utilization series into
+# reactive rebalance triggers.
+from .engine import (
+    DEFAULT_MOVE_COST,
+    RECONFIG_MODES,
+    RECONFIG_SCHEMAS,
+    ReconfigEngine,
+    validate_reconfig,
+)
+from .policy import ReconfigPolicy
+
+__all__ = [
+    "DEFAULT_MOVE_COST",
+    "RECONFIG_MODES",
+    "RECONFIG_SCHEMAS",
+    "ReconfigEngine",
+    "ReconfigPolicy",
+    "validate_reconfig",
+]

@@ -1,0 +1,360 @@
+"""Joint (migration set × placement) reconfiguration engine.
+
+The paper's §3 asks that "if there are failures … the scheduler must be
+able to produce another scheduling quickly"; the greedy ``Rescheduler``
+answers with an O(orphans × nodes) patch-up that never reconsiders healthy
+placements.  This engine makes reconfiguration a search problem instead:
+
+* ``mode="greedy"`` delegates verbatim to :class:`~repro.core.rescheduler.
+  Rescheduler` — same objects, same call order — so existing scenario
+  traces replay bit-identically (pinned by the golden-equivalence tests).
+* ``mode="search"`` first runs the greedy pass (a complete feasible
+  baseline, and the fallback when search finds nothing better), then — per
+  topology — seeds the batch annealer from the *current* assignment and
+  searches migrations and orphan placements jointly.  Each surviving task
+  carries a ``move_cost`` penalty on the netcost term (threaded through
+  all three evaluator backends), so the search only relocates a healthy
+  task when the throughput/netcost gain pays for the disruption; orphan
+  moves are sunk (zero cost).  A candidate is committed only if the full
+  multi-topology simulation (``stream.simulator.run_many``) shows **no
+  topology** losing sink throughput versus the greedy baseline — the
+  never-worse guarantee measured in what §6 measures.
+
+Budgeted calls (``budget_s``) resolve chains×steps through the portfolio's
+deterministic tier plan — no wall-clock read anywhere in the decision
+path, so a control loop gets a latency contract without losing replay
+determinism.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from ..assignment import Assignment
+from ..engine import PlacementArena
+from ..multitopology import GlobalState
+from ..registry import KwargField
+from ..rescheduler import RebalanceResult, Rescheduler
+from ..search.anneal import BatchAnnealer, OBJECTIVES
+from ..search.backend import BACKENDS, resolve_backend
+from ..search.batch import BatchArena
+from ..search.objective import evaluate_batch
+from ..search.portfolio import PERTURB_SWAPS, _perturb, budget_plan
+from ..search.throughput import compile_throughput, quantize
+
+#: Reconfiguration modes the control plane validates against.
+RECONFIG_MODES = ("greedy", "search")
+
+#: Per-task migration penalty, in net-distance hops: relocating a healthy
+#: task must buy at least this much netcost reduction (or a throughput
+#: gain) to be accepted.  Dyadic, so the summed move term stays exact.
+DEFAULT_MOVE_COST = 0.5
+
+#: Per-mode kwargs schemas (the scheduler-registry validation idiom, so
+#: ``reconfig_kwargs`` are validated data, not code).
+RECONFIG_SCHEMAS: Dict[str, Dict[str, KwargField]] = {
+    "greedy": {},
+    "search": {
+        "n_chains": KwargField(
+            types=(int,), default=16, minimum=1, doc="parallel search chains"
+        ),
+        "steps": KwargField(
+            types=(int,), default=600, minimum=1, doc="swap proposals per chain"
+        ),
+        "seed": KwargField(types=(int,), default=0, minimum=0, doc="PRNG seed"),
+        "objective": KwargField(
+            types=(str,),
+            default="throughput",
+            choices=OBJECTIVES,
+            doc="what the rebalance search optimizes (throughput sees a CPU "
+            "hotspot; netcost is the QM3DKP quadratic term)",
+        ),
+        "backend": KwargField(
+            types=(str,),
+            default="auto",
+            choices=BACKENDS,
+            doc="batch evaluator backend (golden-equal across all three)",
+        ),
+        "multi_swap": KwargField(
+            types=(int,),
+            default=8,
+            minimum=1,
+            doc="swap proposals fused per lax.scan element (jax/pallas)",
+        ),
+        "move_cost": KwargField(
+            types=(int, float),
+            default=DEFAULT_MOVE_COST,
+            minimum=0,
+            doc="per-task migration penalty in net-distance hops (grid-"
+            "quantized; orphans move free — their move is sunk)",
+        ),
+        "budget_s": KwargField(
+            types=(int, float, type(None)),
+            default=None,
+            doc="latency budget (seconds): chains×steps from the portfolio's "
+            "deterministic tier plan instead of the explicit kwargs",
+        ),
+    },
+}
+
+
+def validate_reconfig(
+    mode: Any, kwargs: Optional[Mapping[str, Any]] = None, path: str = "reconfig"
+) -> List[str]:
+    """Validate a (mode, kwargs) pair; returns all error strings at once."""
+    if mode not in RECONFIG_MODES:
+        return [
+            f"{path}: unknown mode {mode!r}; choose from {sorted(RECONFIG_MODES)}"
+        ]
+    schema = RECONFIG_SCHEMAS[mode]
+    errors: List[str] = []
+    for key in sorted(kwargs or {}):
+        if key not in schema:
+            errors.append(
+                f"{path}.{key}: unknown kwarg for mode {mode!r}; "
+                f"allowed: {sorted(schema)}"
+            )
+            continue
+        err = schema[key].check(f"{path}.{key}", kwargs[key])
+        if err:
+            errors.append(err)
+            continue
+        # budget_s is strictly positive when given (KwargField minimums are
+        # inclusive and skip None, so the exclusive bound is checked here).
+        if (
+            key == "budget_s"
+            and kwargs[key] is not None
+            and kwargs[key] <= 0
+        ):
+            errors.append(
+                f"{path}.budget_s: must be > 0 (seconds), got {kwargs[key]!r}"
+            )
+    return errors
+
+
+class ReconfigEngine:
+    """One reconfiguration plane over a :class:`GlobalState`.
+
+    The lifecycle verbs mirror the greedy ``Rescheduler``'s: ``fail_node``
+    (lazy, Storm-like — orphans wait for a rebalance), ``handle_scale_up``
+    and ``rebalance``.
+    """
+
+    def __init__(
+        self,
+        state: GlobalState,
+        weights=None,
+        mode: str = "greedy",
+        kwargs: Optional[Mapping[str, Any]] = None,
+    ):
+        errors = validate_reconfig(mode, kwargs)
+        if errors:
+            raise ValueError("; ".join(errors))
+        self.state = state
+        self.weights = weights
+        self.mode = mode
+        merged = {k: f.default for k, f in RECONFIG_SCHEMAS[mode].items()}
+        merged.update(kwargs or {})
+        self.kwargs = merged
+        if mode == "search":
+            merged["backend"] = resolve_backend(merged["backend"])
+        self._greedy = Rescheduler(state, weights)
+
+    # -- lifecycle verbs -------------------------------------------------------
+    def fail_node(self, node_id: str) -> List[Tuple[str, str]]:
+        """Mark a node dead; orphans stay recorded until a rebalance (the
+        assignment outlives the worker, as in Storm's ZooKeeper state)."""
+        return self.state.fail_node(node_id)
+
+    def handle_scale_up(self, node_specs) -> RebalanceResult:
+        """Join fresh nodes, then re-place (and in search mode, re-search)."""
+        if self.mode == "greedy":
+            return self._greedy.handle_scale_up(node_specs)
+        pre = self._snapshot()
+        self._greedy.handle_scale_up(node_specs)
+        return self._search_pass(pre)
+
+    def rebalance(self) -> RebalanceResult:
+        """Re-place orphaned and unassigned tasks; in search mode, also
+        search (migration × placement) jointly from the greedy baseline."""
+        if self.mode == "greedy":
+            return self._greedy.rebalance()
+        pre = self._snapshot()
+        self._greedy.rebalance()
+        return self._search_pass(pre)
+
+    # -- search mode -----------------------------------------------------------
+    def _snapshot(self) -> Dict[str, Dict[str, str]]:
+        """Pre-rebalance placements (dead-node entries included): the
+        reference frame migration penalties and ``moved`` are charged in."""
+        return {
+            topo_id: dict(a.placements)
+            for topo_id, a in self.state.assignments.items()
+        }
+
+    def _search_pass(self, pre: Dict[str, Dict[str, str]]) -> RebalanceResult:
+        state = self.state
+        for topo_id in sorted(state.assignments):
+            if len(state.assignments[topo_id].placements) >= 2:
+                self._search_topology(topo_id, pre.get(topo_id, {}))
+        # The result is recomputed against the pre-rebalance frame, so a
+        # task greedy placed and search then relocated counts once.
+        result = RebalanceResult()
+        for topo_id in sorted(state.assignments):
+            a = state.assignments[topo_id]
+            p0 = pre.get(topo_id, {})
+            moved = sorted(
+                tid for tid, nid in a.placements.items() if p0.get(tid) != nid
+            )
+            if moved:
+                result.moved[topo_id] = moved
+            if a.unassigned:
+                result.unplaced[topo_id] = sorted(a.unassigned)
+        return result
+
+    def _plan(self, n_tasks: int) -> Tuple[int, int]:
+        if self.kwargs["budget_s"] is not None:
+            return budget_plan(float(self.kwargs["budget_s"]), n_tasks)
+        return self.kwargs["n_chains"], self.kwargs["steps"]
+
+    def _search_topology(self, topo_id: str, pre: Dict[str, str]) -> None:
+        """Anneal one topology's placements from the greedy baseline and
+        commit the winner iff no topology loses simulated throughput."""
+        state, cluster = self.state, self.state.cluster
+        topology = state.topologies[topo_id]
+        assignment = state.assignments[topo_id]
+        placements = dict(assignment.placements)
+        tasks = {t.id: t for t in topology.all_tasks()}
+
+        # The arena ledger reflects every committed topology; virtually
+        # unassigning *this* topology's tasks yields the capacity budget
+        # its candidates are scored against (other tenants stay charged).
+        arena = PlacementArena(cluster, topology, self.weights)
+        rows: Dict[str, np.ndarray] = {}
+
+        def row_of(tid: str) -> np.ndarray:
+            cid = tasks[tid].component_id
+            if cid not in rows:
+                rows[cid] = arena.compile_demand(
+                    topology.components[cid].resource_demand
+                )[0]
+            return rows[cid]
+
+        for tid in sorted(placements):
+            arena.unassign(arena.index[placements[tid]], row_of(tid))
+        avail0 = arena.snapshot()
+        ba = BatchArena.from_arena(arena, topology, placements, avail0=avail0)
+
+        # Migration term: surviving tasks pay move_cost off their pre-
+        # rebalance node; orphans and previously-unassigned tasks move free.
+        node_index = {nid: i for i, nid in enumerate(ba.node_ids)}
+        mb = np.zeros(ba.n_tasks, dtype=np.intp)
+        mc = np.zeros(ba.n_tasks, dtype=np.float64)
+        cost = float(quantize(np.float64(self.kwargs["move_cost"])))
+        for i, tid in enumerate(ba.tids):
+            prev = pre.get(tid)
+            if prev is not None and cluster.nodes[prev].alive:
+                mb[i] = node_index[prev]
+                mc[i] = cost
+            else:
+                mb[i] = node_index[placements[tid]]
+        ba.move_base, ba.move_cost = mb, mc
+
+        greedy_row = ba.encode(placements)
+        n_chains, steps = self._plan(ba.n_tasks)
+        objective = self.kwargs["objective"]
+        backend = self.kwargs["backend"]
+        seed = self.kwargs["seed"]
+        tm = (
+            compile_throughput(ba, topology, cluster)
+            if objective == "throughput"
+            else None
+        )
+        P0 = np.tile(greedy_row, (n_chains, 1))
+        # Chain 0 stays the greedy baseline; the rest explore perturbations.
+        _perturb(P0, np.arange(1, n_chains), PERTURB_SWAPS, seed ^ 0x5EED)
+        P = BatchAnnealer(ba, backend=backend).run(
+            P0, steps, seed, objective=objective, tm=tm,
+            multi_swap=self.kwargs["multi_swap"],
+        )
+        result = evaluate_batch(ba, P, backend=backend, throughput_model=tm)
+        base = evaluate_batch(ba, greedy_row, backend=backend, throughput_model=tm)
+        candidate = self._pick(ba, P, result, base, objective)
+        if candidate is None:
+            return
+        if not self._simulated_no_worse(topo_id, candidate):
+            return
+        # Commit the diff through the node ledger (the same unassign/assign
+        # bookkeeping every other lifecycle verb uses).
+        for tid in sorted(candidate):
+            new_nid = candidate[tid]
+            old_nid = placements[tid]
+            if new_nid == old_nid:
+                continue
+            task = tasks[tid]
+            d = topology.demand_of(task)
+            old_node = cluster.nodes[old_nid]
+            if task in old_node.assigned_tasks:
+                old_node.unassign(task, d)
+            cluster.nodes[new_nid].assign(task, d)
+            assignment.placements[tid] = new_nid
+
+    def _pick(
+        self, ba, P, result, base, objective
+    ) -> Optional[Dict[str, str]]:
+        """Best feasible chain strictly better than the greedy baseline.
+        ``net`` already carries the move penalty (the baseline's is 0.0 —
+        it never relocates a surviving task), so "better" means the gain
+        outweighs the disruption."""
+        if objective == "throughput":
+            tp = np.where(result.feasible, result.throughput, -np.inf)
+            best_tp = tp.max()
+            if not np.isfinite(best_tp):
+                return None
+            tie = tp == best_tp
+            net = np.where(tie, result.net, np.inf)
+            best = int(np.argmin(net))  # ties → lowest chain index
+            g_tp, g_net = float(base.throughput[0]), float(base.net[0])
+            if (tp[best], -net[best]) <= (g_tp, -g_net):
+                return None
+        else:
+            cand = np.where(result.feasible, result.net, np.inf)
+            best = int(np.argmin(cand))
+            if not np.isfinite(cand[best]) or cand[best] >= base.net[0]:
+                return None
+        return ba.decode(P[best])
+
+    def _simulated_no_worse(
+        self, topo_id: str, candidate: Dict[str, str]
+    ) -> bool:
+        """Joint never-worse guard: simulate all tenants together with the
+        candidate swapped in; every topology must hold its sink throughput
+        versus the greedy baseline (a strictly-better proxy keeps a tie)."""
+        from ...stream.simulator import Simulator  # lazy: stream imports core
+
+        state = self.state
+        sim = Simulator(state.cluster)
+
+        def run_all(trial: Optional[Dict[str, str]]) -> Dict[str, float]:
+            pairs = []
+            for tid in sorted(state.assignments):
+                p = (
+                    trial
+                    if trial is not None and tid == topo_id
+                    else state.assignments[tid].placements
+                )
+                pairs.append(
+                    (state.topologies[tid], Assignment(tid, placements=dict(p)))
+                )
+            return {
+                tid: r.sink_throughput
+                for tid, r in sim.run_many(pairs).items()
+            }
+
+        base = run_all(None)
+        with_candidate = run_all(candidate)
+        return all(
+            with_candidate[tid] >= base[tid] for tid in sorted(base)
+        )

@@ -1,0 +1,91 @@
+"""DRS-style reactive reconfiguration policy (Fu et al., PAPERS.md).
+
+Lifecycle events (fail/join) are not the only reason to rebalance: a load
+shift can leave the placement stale while every node stays alive.  The
+policy turns the observability plane's measured signals — the DES
+executor's ``des.node_utilization`` and ``des.task_queue_depth`` series —
+into rebalance triggers: when per-node utilization imbalance (max − mean)
+or queue depth stays above threshold for ``sustain`` consecutive
+intervals, the scenario runner fires one budgeted search rebalance, then
+holds off for ``cooldown`` intervals so a slow-draining backlog doesn't
+re-trigger on its own echo.
+
+The decision is a pure function of hub state and the policy's counters —
+no clocks, no randomness — so a replay triggers on exactly the same steps
+every time.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class ReconfigPolicy:
+    """Sustained-imbalance trigger over the obs hub's DES series."""
+
+    def __init__(
+        self,
+        util_imbalance: float = 0.25,
+        queue_depth: Optional[float] = None,
+        sustain: int = 1,
+        cooldown: int = 1,
+    ):
+        if util_imbalance < 0:
+            raise ValueError(
+                f"util_imbalance must be >= 0, got {util_imbalance!r}"
+            )
+        if queue_depth is not None and queue_depth < 0:
+            raise ValueError(f"queue_depth must be >= 0, got {queue_depth!r}")
+        if sustain < 1:
+            raise ValueError(f"sustain must be >= 1, got {sustain!r}")
+        if cooldown < 0:
+            raise ValueError(f"cooldown must be >= 0, got {cooldown!r}")
+        self.util_imbalance = util_imbalance
+        self.queue_depth = queue_depth
+        self.sustain = sustain
+        self.cooldown = cooldown
+        #: Most recent (max − mean) node utilization, for introspection.
+        self.last_imbalance: Optional[float] = None
+        self._hot = 0
+        self._cooldown_left = 0
+        self.triggers = 0
+
+    def observe(self, hub) -> bool:
+        """Read the latest interval's signals; True ⇔ fire a rebalance now.
+
+        ``hub.find`` returns metrics in export (sorted-key) order, so the
+        reduction order — and therefore the decision — is deterministic.
+        """
+        if not getattr(hub, "enabled", False):
+            return False
+        utils = [
+            float(series.points[-1][1])
+            for _, series in hub.find("series", "des.node_utilization")
+            if series.points
+        ]
+        hot = False
+        if len(utils) >= 2:
+            arr = np.array(utils, dtype=np.float64)
+            self.last_imbalance = float(arr.max() - arr.mean())
+            hot = self.last_imbalance > self.util_imbalance
+        if not hot and self.queue_depth is not None:
+            depths = [
+                float(series.points[-1][1])
+                for _, series in hub.find("series", "des.task_queue_depth")
+                if series.points
+            ]
+            if depths and max(depths) >= self.queue_depth:
+                hot = True
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            self._hot = 0
+            return False
+        self._hot = self._hot + 1 if hot else 0
+        if self._hot >= self.sustain:
+            self._hot = 0
+            self._cooldown_left = self.cooldown
+            self.triggers += 1
+            return True
+        return False

@@ -152,36 +152,51 @@ class StragglerMitigator:
         return sorted(out)
 
     def migrate(self, task_ids: List[str]) -> Dict[str, str]:
-        """Move straggling tasks to the closest feasible *other* node."""
+        """Move straggling tasks to the closest feasible *other* node.
+
+        One ``_task_components`` resolution up front, then a single walk of
+        ``task_ids`` — O(task_ids × nodes), not O(task_ids × topologies):
+        the same map ``find_stragglers`` already resolves collisions with.
+        """
         cluster = self.state.cluster
         moves: Dict[str, str] = {}
-        for topo_id, assignment in self.state.assignments.items():
+        components = self._task_components()
+        selector = NodeSelector(cluster, self.weights)
+        tasks_by_topo: Dict[str, Dict[str, Task]] = {}
+        for tid in task_ids:
+            comp = components.get(tid)
+            if comp is None:
+                continue
+            topo_id = comp[0]
+            assignment = self.state.assignments.get(topo_id)
+            if assignment is None or tid not in assignment.placements:
+                continue
             topology = self.state.topologies[topo_id]
-            tasks = {t.id: t for t in topology.all_tasks()}
-            selector = NodeSelector(cluster, self.weights)
-            for tid in task_ids:
-                if tid not in assignment.placements or tid not in tasks:
+            tasks = tasks_by_topo.get(topo_id)
+            if tasks is None:
+                tasks = tasks_by_topo[topo_id] = {
+                    t.id: t for t in topology.all_tasks()
+                }
+            old_nid = assignment.placements[tid]
+            task = tasks[tid]
+            d = topology.demand_of(task)
+            old_node = cluster.nodes[old_nid]
+            if task in old_node.assigned_tasks:
+                old_node.unassign(task, d)
+            selector.ref_node = old_nid  # stay close to prior placement
+            best = None
+            best_d = math.inf
+            for nid in sorted(cluster.nodes):
+                node = cluster.nodes[nid]
+                if nid == old_nid or not node.alive or not node.can_fit_hard(d):
                     continue
-                old_nid = assignment.placements[tid]
-                task = tasks[tid]
-                d = topology.demand_of(task)
-                old_node = cluster.nodes[old_nid]
-                if task in old_node.assigned_tasks:
-                    old_node.unassign(task, d)
-                selector.ref_node = old_nid  # stay close to prior placement
-                best = None
-                best_d = math.inf
-                for nid in sorted(cluster.nodes):
-                    node = cluster.nodes[nid]
-                    if nid == old_nid or not node.alive or not node.can_fit_hard(d):
-                        continue
-                    dist = selector.distance(d, node)
-                    if dist < best_d:
-                        best, best_d = node, dist
-                if best is None:  # nowhere better — put it back
-                    old_node.assign(task, d)
-                    continue
-                best.assign(task, d)
-                assignment.placements[tid] = best.id
-                moves[tid] = best.id
+                dist = selector.distance(d, node)
+                if dist < best_d:
+                    best, best_d = node, dist
+            if best is None:  # nowhere better — put it back
+                old_node.assign(task, d)
+                continue
+            best.assign(task, d)
+            assignment.placements[tid] = best.id
+            moves[tid] = best.id
         return moves

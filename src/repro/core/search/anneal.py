@@ -132,6 +132,19 @@ class _AnnealObs:
             rates.append(b, int(acc[b]) / max(steps, 1))
 
 
+def move_delta(move_cost, move_base, i, j, na, nb, xp=np):
+    """Δ(migration term) for swapping tasks ``i``/``j`` between nodes
+    ``na``/``nb``: each task's penalty toggles on whether its new node
+    matches its pre-move node.  With all-zero costs the result is ±0.0,
+    which is bitwise inert on the accept comparisons — zero-cost arenas
+    walk chains identical to arenas without the term."""
+    ci, cj = move_cost[i], move_cost[j]
+    bi, bj = move_base[i], move_base[j]
+    return ci * (
+        (nb != bi).astype(xp.float64) - (na != bi).astype(xp.float64)
+    ) + cj * ((na != bj).astype(xp.float64) - (nb != bj).astype(xp.float64))
+
+
 def swap_proposals(
     n_tasks: int, steps: int, n_chains: int, seed: int
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -231,6 +244,7 @@ class BatchAnnealer:
         acc = np.zeros(P.shape[0], dtype=np.int64)
         marks = _curve_marks(ii.shape[0], 1) if rec is not None else []
         nm = 0
+        mb, mc = ba.move_base, ba.move_cost
         for s in range(ii.shape[0]):
             i, j = ii[s], jj[s]
             na, nb = P[bidx, i], P[bidx, j]
@@ -244,6 +258,8 @@ class BatchAnnealer:
             delta = delta + OVERLOAD_PENALTY * swap_overload_delta(
                 ba.avail[na], ba.avail[nb], used[bidx, na], used[bidx, nb], di, dj
             )
+            if mc is not None:
+                delta = delta + move_delta(mc, mb, i, j, na, nb)
             accept = (na != nb) & (delta <= thresh[s])
             P[bidx, i] = np.where(accept, nb, na)
             P[bidx, j] = np.where(accept, na, nb)
@@ -268,6 +284,7 @@ class BatchAnnealer:
         acc = np.zeros(B, dtype=np.int64)
         marks = _curve_marks(ii.shape[0], 1) if rec is not None else []
         nm = 0
+        mb, mc = ba.move_base, ba.move_cost
         cpu_load, mem_used, egress, ingress, rack_up, ack_num = aggregates_numpy(
             ba, tm, P
         )
@@ -284,6 +301,8 @@ class BatchAnnealer:
             pb = P[bidx[:, None], np.where(mj, aj, 0)]
             m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
             dnet = swap_network_delta(ba.net, na, nb, pa, pb, m_ab, mi, mj)
+            if mc is not None:
+                dnet = dnet + move_delta(mc, mb, i, j, na, nb)
             di, dj = ba.hard_demand[i], ba.hard_demand[j]
             dov = swap_overload_delta(
                 ba.avail[na], ba.avail[nb], used[bidx, na], used[bidx, nb], di, dj
@@ -354,8 +373,10 @@ class BatchAnnealer:
     def _run_jax_tp(self, P0, used0, ii, jj, thresh, tm, k, rec=None) -> np.ndarray:
         ba = self.ba
         state = aggregates_numpy(ba, tm, P0.astype(np.intp))
+        mb, mc = ba.move_arrays()
         model_args = (
             ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
+            mb.astype(np.int32), mc,
             tm.task_cpu, tm.task_mem, tm.cpu_cap, tm.mem_cap,
             tm.nic_cap, tm.rack_cap, tm.adj_bytes, tm.adj_src,
             tm.adj_comp, tm.adj_lat, tm.rack_of, tm.den_flow,
@@ -388,13 +409,14 @@ class BatchAnnealer:
         P, used = P0.astype(np.int32), used0
         acc = np.zeros(P0.shape[0], dtype=np.int32)
         steps = ii.shape[0]
+        mb, mc = ba.move_arrays()
         marks = _curve_marks(steps, min(k, steps)) if rec is not None else None
         with x64():
             for lo, hi, kk in _swap_blocks(steps, k):
                 for mlo, mhi in _mark_segments(lo, hi, marks):
                     P, used, acc = _jax_anneal_fn(kk)(
                         ba.net, ba.avail, ba.hard_demand, ba.adj, ba.adj_mask,
-                        P, used, acc,
+                        mb.astype(np.int32), mc, P, used, acc,
                         _rows(ii, mlo, mhi, kk), _rows(jj, mlo, mhi, kk),
                         thresh[mlo:mhi].reshape(-1, kk),
                     )
@@ -435,7 +457,10 @@ def _jax_anneal_fn(k: int):
     jax, jnp = jax_modules()
 
     @jax.jit
-    def anneal(net, avail, hard_demand, adj, adj_mask, P0, used0, acc0, ii, jj, thresh):
+    def anneal(
+        net, avail, hard_demand, adj, adj_mask, move_base, move_cost,
+        P0, used0, acc0, ii, jj, thresh,
+    ):
         bidx = jnp.arange(P0.shape[0])
 
         def swap(P, used, acc, i, j, th):
@@ -450,6 +475,8 @@ def _jax_anneal_fn(k: int):
             delta = delta + OVERLOAD_PENALTY * swap_overload_delta(
                 avail[na], avail[nb], used[bidx, na], used[bidx, nb], di, dj, xp=jnp
             )
+            # ±0.0 with zero costs — accept comparisons are unchanged.
+            delta = delta + move_delta(move_cost, move_base, i, j, na, nb, xp=jnp)
             accept = (na != nb) & (delta <= th)
             P = P.at[bidx, i].set(jnp.where(accept, nb, na))
             P = P.at[bidx, j].set(jnp.where(accept, na, nb))
@@ -487,7 +514,7 @@ def _jax_anneal_tp_fn(ack, k: int):
 
     @jax.jit
     def anneal(
-        net, avail, hard_demand, adj, adj_mask,
+        net, avail, hard_demand, adj, adj_mask, move_base, move_cost,
         task_cpu, task_mem, cpu_cap, mem_cap, nic_cap, rack_cap,
         adj_bytes, adj_src, adj_comp, adj_lat, rack_of, den_flow,
         thrash_factor, source_bound, sink_rate,
@@ -516,6 +543,8 @@ def _jax_anneal_tp_fn(ack, k: int):
             pb = P[bidx[:, None], jnp.where(mj, aj, 0)]
             m_ab = ((ai == j[:, None]) & mi).sum(axis=-1)
             dnet = swap_network_delta(net, na, nb, pa, pb, m_ab, mi, mj, xp=jnp)
+            # ±0.0 with zero costs — the tie-break compare is unchanged.
+            dnet = dnet + move_delta(move_cost, move_base, i, j, na, nb, xp=jnp)
             di, dj = hard_demand[i], hard_demand[j]
             dov = swap_overload_delta(
                 avail[na], avail[nb], used[bidx, na], used[bidx, nb], di, dj, xp=jnp

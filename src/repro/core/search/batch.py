@@ -54,6 +54,17 @@ class BatchArena:
     # Rack topology (throughput-proxy link flows): rack index per node.
     rack_of: Optional[np.ndarray] = None  # (N,) intp
     n_racks: int = 0
+    # Migration soft-cost (reconfiguration searches): a per-task penalty
+    # added to ``net`` for every task placed away from its pre-rebalance
+    # node, so the search trades netcost/throughput gains against live-
+    # cluster disruption.  None ⇔ no move term (from-scratch scheduling):
+    # the numpy evaluator skips the term and the jax/pallas paths receive
+    # zero arrays, whose +0.0 contribution is bitwise inert on the
+    # non-negative net sums — scores stay golden-equal to pre-move arenas.
+    # Costs must be dyadic-grid multiples (the engine quantizes them) so
+    # the summed term is exact in any accumulation order.
+    move_base: Optional[np.ndarray] = None  # (T,) intp pre-move node index
+    move_cost: Optional[np.ndarray] = None  # (T,) float64 per-task penalty
 
     @property
     def n_nodes(self) -> int:
@@ -136,6 +147,17 @@ class BatchArena:
             rack_of=arena.rack_of.copy(),
             n_racks=len(arena.rack_ids),
         )
+
+    def move_arrays(self) -> "tuple[np.ndarray, np.ndarray]":
+        """``(move_base, move_cost)`` with zero-cost defaults — the dense
+        form the jax/pallas paths always consume (cost 0.0 ⇔ the move term
+        adds +0.0, which is bitwise inert on the non-negative net sums)."""
+        if self.move_cost is None:
+            return (
+                np.zeros(self.n_tasks, dtype=np.intp),
+                np.zeros(self.n_tasks, dtype=np.float64),
+            )
+        return self.move_base, self.move_cost
 
     # -- placement codecs ------------------------------------------------------
     def encode(self, placements: Dict[str, str]) -> np.ndarray:

@@ -63,6 +63,7 @@ def default_interpret() -> bool:
 def _fused_kernel(
     # inputs (refs): candidate block + shared arena arrays
     P_ref, net_ref, avail_ref, demand_ref, deadw_ref, edges_ref, evalid_ref,
+    mb_ref, mc_ref,
     *refs,
     blk_b: int,
     n_nodes: int,
@@ -112,7 +113,13 @@ def _fused_kernel(
     src_n = P[:, src_t]               # (blk_b, E)
     dst_n = P[:, dst_t]
     evalid = evalid_ref[...]          # (E,) 1.0 real edge / 0.0 padding
-    net_o[...] = (net_ref[...][src_n, dst_n] * evalid[None, :]).sum(axis=-1)
+    # Migration soft cost: per-task penalty when placed off its pre-move
+    # node (zero arrays on non-reconfig arenas → +0.0, bitwise inert).
+    net_o[...] = (net_ref[...][src_n, dst_n] * evalid[None, :]).sum(
+        axis=-1
+    ) + jnp.where(P != mb_ref[...][None, :], mc_ref[...][None, :], 0.0).sum(
+        axis=-1
+    )
 
     if not with_tp:
         return
@@ -199,9 +206,9 @@ def _fused_fn(
         return pl.BlockSpec(a.shape, lambda i: (0,) * nd)
 
     @jax.jit
-    def run(P, net, avail, demand, deadw, edges, evalid, *tp_arrays):
+    def run(P, net, avail, demand, deadw, edges, evalid, mb, mc, *tp_arrays):
         Bp, T = P.shape
-        inputs = (P, net, avail, demand, deadw, edges, evalid) + tp_arrays
+        inputs = (P, net, avail, demand, deadw, edges, evalid, mb, mc) + tp_arrays
         n_out = 4 if with_tp else 3
         out = pl.pallas_call(
             kernel,
@@ -236,7 +243,8 @@ def _padded_inputs(ba: BatchArena, tm: Optional[ThroughputModel]):
     else:
         edges = np.zeros((1, 2), dtype=np.int32)
         evalid = np.zeros(1, dtype=np.float64)
-    base = (ba.net, avail, demand, deadw, edges, evalid)
+    mb, mc = ba.move_arrays()
+    base = (ba.net, avail, demand, deadw, edges, evalid, mb.astype(np.int32), mc)
     if tm is None:
         return base, ()
     if E:

@@ -4,7 +4,10 @@ Given a ``BatchArena`` and a batch of candidate placements as an int array
 ``(B, T)`` of node indices, return per-candidate
 
 * ``net``        — network cost: inter-node edge traffic × rack distance
-  (the quadratic QM3DKP term R-Storm's greedy minimizes implicitly);
+  (the quadratic QM3DKP term R-Storm's greedy minimizes implicitly), plus
+  — on arenas carrying ``move_base``/``move_cost`` (reconfiguration
+  searches) — the per-task migration penalty for every task placed away
+  from its pre-rebalance node;
 * ``violation``  — total hard-capacity overshoot across nodes and hard
   columns (0.0 ⇔ the candidate respects every hard constraint);
 * ``dead``       — count of tasks placed on dead nodes.
@@ -60,10 +63,15 @@ def _evaluate_numpy(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
     viol = np.zeros(B, dtype=np.float64)
     dead = np.zeros(B, dtype=np.int64)
     e0, e1 = ba.edges[:, 0], ba.edges[:, 1]
+    mb, mc = ba.move_base, ba.move_cost
     for lo, hi in chunk_ranges(B, chunk):
         p = P[lo:hi]
         if e0.size:
             net[lo:hi] = ba.net[p[:, e0], p[:, e1]].sum(axis=-1)
+        if mc is not None:
+            # Same edge-sum + move-sum decomposition as the jax/pallas
+            # paths; dyadic costs make the sum order-independent.
+            net[lo:hi] = net[lo:hi] + np.where(p != mb, mc, 0.0).sum(axis=-1)
         used = ba.used(p)
         viol[lo:hi] = np.maximum(used - ba.avail, 0.0).sum(axis=(1, 2))
         dead[lo:hi] = (~ba.alive[p]).sum(axis=-1)
@@ -77,10 +85,13 @@ def _jax_eval_fn(n_nodes: int):
     jax, jnp = jax_modules()
 
     @jax.jit
-    def evaluate(net, avail, hard_demand, alive, edges, P):
+    def evaluate(net, avail, hard_demand, alive, edges, move_base, move_cost, P):
         def one(p):
             # An empty edge set gathers to an empty row; its sum is 0.0.
-            netc = net[p[edges[:, 0]], p[edges[:, 1]]].sum()
+            # The move term adds +0.0 on zero-cost arenas (bitwise inert).
+            netc = net[p[edges[:, 0]], p[edges[:, 1]]].sum() + jnp.where(
+                p != move_base, move_cost, 0.0
+            ).sum()
             used = jax.ops.segment_sum(hard_demand, p, num_segments=n_nodes)
             violc = jnp.maximum(used - avail, 0.0).sum()
             deadc = (~alive[p]).sum()
@@ -97,6 +108,7 @@ def _evaluate_jax(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
     viol = np.zeros(B, dtype=np.float64)
     dead = np.zeros(B, dtype=np.int64)
     fn = _jax_eval_fn(ba.n_nodes)
+    mb, mc = ba.move_arrays()
     with x64():
         # Chunked like the numpy path: the (chunk, E) gather is the working
         # set, so a huge batch never materializes one (B, E) intermediate.
@@ -104,7 +116,7 @@ def _evaluate_jax(ba: BatchArena, P: np.ndarray, chunk: int) -> BatchEval:
         for lo, hi in chunk_ranges(B, chunk):
             n, v, d = fn(
                 ba.net, ba.avail, ba.hard_demand, ba.alive, ba.edges,
-                P[lo:hi],
+                mb, mc, P[lo:hi],
             )
             net[lo:hi] = np.asarray(n, dtype=np.float64)
             viol[lo:hi] = np.asarray(v, dtype=np.float64)

@@ -47,6 +47,42 @@ from .throughput import compile_throughput
 
 INIT_MODES = ("greedy", "random", "all-registered")
 
+#: Time-budget tiers for ``budget_s``: ``(ceiling_s, n_chains, step_scale)``.
+#: A budget resolves to the first tier whose ceiling covers it and ``steps``
+#: is ``step_scale × n_tasks`` clamped to [BUDGET_MIN_STEPS, BUDGET_MAX_STEPS].
+#: The table is a calibrated static cost model — the decision path never
+#: reads a clock, so a given (budget tier, topology size) always produces
+#: the *same* search on any machine: the budget is honored statistically,
+#: the determinism exactly (the contract a control loop needs).
+BUDGET_TIERS = (
+    (0.1, 8, 4),
+    (0.5, 16, 12),
+    (2.0, 32, 40),
+    (10.0, 64, 120),
+)
+#: Plan for budgets above the last tier ceiling.
+BUDGET_FLOOR_PLAN = (128, 400)
+BUDGET_MIN_STEPS = 64
+BUDGET_MAX_STEPS = 20_000
+
+
+def budget_plan(budget_s: float, n_tasks: int) -> "tuple[int, int]":
+    """Deterministic ``(n_chains, steps)`` for a latency budget.
+
+    Pure in (budget tier, topology size): no wall-clock read anywhere in
+    the decision path (hot-loop lint contract), so budgeted searches replay
+    bit-identically.
+    """
+    if budget_s <= 0:
+        raise ValueError(f"budget_s must be > 0, got {budget_s!r}")
+    for ceiling, chains, scale in BUDGET_TIERS:
+        if budget_s <= ceiling:
+            break
+    else:
+        chains, scale = BUDGET_FLOOR_PLAN
+    steps = min(BUDGET_MAX_STEPS, max(BUDGET_MIN_STEPS, scale * max(n_tasks, 1)))
+    return chains, steps
+
 #: Randomized-task-order greedy seeds are sequential (one Alg-4 descent
 #: each), so only this many chains get one; the rest start from seeded
 #: random perturbations of the plain greedy placement.
@@ -136,6 +172,14 @@ def _perturb(base: np.ndarray, rows: np.ndarray, n_swaps: int, seed: int) -> Non
             "annealing path (k× fewer scan steps, bit-identical chains; "
             "no-op on numpy)",
         ),
+        "budget_s": KwargField(
+            types=(int, float, type(None)),
+            default=None,
+            doc="latency budget (seconds): overrides n_chains/steps with the "
+            "deterministic tier plan (budget_plan) sized from the topology — "
+            "no wall-clock in the decision path, so a budgeted search "
+            "replays bit-identically",
+        ),
     },
 )
 class SearchScheduler(Scheduler):
@@ -151,6 +195,7 @@ class SearchScheduler(Scheduler):
         objective: str = "netcost",
         backend: str = "auto",
         multi_swap: int = 8,
+        budget_s: Optional[float] = None,
     ):
         if init not in INIT_MODES:
             raise ValueError(f"unknown init {init!r}; choose from {INIT_MODES}")
@@ -160,6 +205,8 @@ class SearchScheduler(Scheduler):
             )
         if multi_swap < 1:
             raise ValueError(f"multi_swap must be >= 1, got {multi_swap}")
+        if budget_s is not None and budget_s <= 0:
+            raise ValueError(f"budget_s must be > 0, got {budget_s!r}")
         self.n_chains = n_chains
         self.steps = steps
         self.seed = seed
@@ -168,6 +215,15 @@ class SearchScheduler(Scheduler):
         self.objective = objective
         self.backend = resolve_backend(backend)
         self.multi_swap = multi_swap
+        self.budget_s = budget_s
+
+    def plan(self, n_tasks: int) -> "tuple[int, int]":
+        """``(n_chains, steps)`` for this run: the explicit kwargs, or —
+        under a ``budget_s`` latency contract — the deterministic tier
+        plan sized from the topology."""
+        if self.budget_s is None:
+            return self.n_chains, self.steps
+        return budget_plan(self.budget_s, n_tasks)
 
     def schedule(
         self, topology: Topology, cluster: Cluster, *, commit: bool = True
@@ -213,23 +269,25 @@ class SearchScheduler(Scheduler):
                     if self.objective == "throughput"
                     else None
                 )
+                n_chains, steps = self.plan(ba.n_tasks)
                 sp.set(n_tasks=ba.n_tasks, n_nodes=ba.n_nodes)
                 # Ordered re-seeds descend from the pre-placement budget,
                 # not from the ledger the greedy seed just consumed.
                 arena.rollback(avail0)
                 P0 = self._build_inits(
-                    ba, arena, topology, cluster, greedy_row, greedy_scheduler
+                    ba, arena, topology, cluster, greedy_row, greedy_scheduler,
+                    n_chains,
                 )
             with hub.span("search.anneal") as sp:
                 sp.set(
                     n_chains=int(P0.shape[0]),
-                    steps=self.steps,
-                    proposals=int(P0.shape[0]) * self.steps,
+                    steps=steps,
+                    proposals=int(P0.shape[0]) * steps,
                     backend=self.backend,
                     multi_swap=self.multi_swap,
                 )
                 P = BatchAnnealer(ba, backend=self.backend).run(
-                    P0, self.steps, self.seed, objective=self.objective, tm=tm,
+                    P0, steps, self.seed, objective=self.objective, tm=tm,
                     multi_swap=self.multi_swap,
                 )
             with hub.span("search.evaluate"):
@@ -352,8 +410,10 @@ class SearchScheduler(Scheduler):
         cluster: Cluster,
         greedy_row: np.ndarray,
         greedy_scheduler: RStormScheduler,
+        n_chains: Optional[int] = None,
     ) -> np.ndarray:
-        B, T = self.n_chains, ba.n_tasks
+        B = self.n_chains if n_chains is None else n_chains
+        T = ba.n_tasks
         rng = np.random.Generator(np.random.Philox([self.seed, 0xC0FFEE]))
         P0 = np.tile(greedy_row, (B, 1))
         if self.init == "random":

@@ -1,0 +1,370 @@
+"""Reconfiguration-plane tests: mode validation, budgeted planning, the
+greedy-mode bit-identity guarantee, the search-mode simulated-never-worse
+acceptance sweep (§6 micro + Yahoo failover), the LoadChangeEvent lifecycle,
+and the DRS-style reactive policy demo (hotspot -> trigger -> p99 drop)."""
+
+import pytest
+
+from repro.api import (
+    ClusterSpec,
+    DesSettings,
+    LoadChangeEvent,
+    Nimbus,
+    NodeEntry,
+    NodeFailEvent,
+    NodeJoinEvent,
+    PayloadValidationError,
+    RebalanceEvent,
+    ReconfigPolicy,
+    ScenarioRunner,
+    ScenarioSpec,
+    SchedulerSpec,
+    SubmitEvent,
+    run_scenario,
+    validate_reconfig,
+)
+from repro.core import (
+    GlobalState,
+    Rescheduler,
+    RStormScheduler,
+    emulab_cluster,
+)
+from repro.core.reconfig import DEFAULT_MOVE_COST, RECONFIG_SCHEMAS, ReconfigEngine
+from repro.core.search.portfolio import (
+    BUDGET_MAX_STEPS,
+    BUDGET_MIN_STEPS,
+    budget_plan,
+)
+from repro.obs import MetricsHub
+from repro.stream import Simulator, topologies
+
+SEARCH_KW = {"seed": 0, "n_chains": 8, "steps": 300}
+
+
+# -- validation -------------------------------------------------------------------
+def test_validate_reconfig_unknown_mode():
+    errors = validate_reconfig("nope")
+    assert errors and "unknown mode" in errors[0]
+
+
+def test_validate_reconfig_greedy_rejects_kwargs():
+    assert validate_reconfig("greedy") == []
+    assert validate_reconfig("greedy", {"steps": 10})
+
+
+def test_validate_reconfig_search_kwargs():
+    assert validate_reconfig("search") == []
+    assert validate_reconfig("search", dict(SEARCH_KW)) == []
+    assert validate_reconfig("search", {"move_cost": -1.0})
+    assert validate_reconfig("search", {"objective": "fastest"})
+    assert validate_reconfig("search", {"unknown_knob": 1})
+    assert validate_reconfig("search", {"budget_s": 0}) and not validate_reconfig(
+        "search", {"budget_s": 0.5}
+    )
+
+
+def test_reconfig_schemas_expose_move_cost_default():
+    assert RECONFIG_SCHEMAS["search"]["move_cost"].default == DEFAULT_MOVE_COST
+    assert RECONFIG_SCHEMAS["greedy"] == {}
+
+
+def test_nimbus_rejects_bad_reconfig():
+    with pytest.raises(PayloadValidationError):
+        Nimbus(reconfig="annealed")
+    with pytest.raises(PayloadValidationError):
+        Nimbus(reconfig="search", reconfig_kwargs={"move_cost": -2})
+
+
+# -- budgeted planning ------------------------------------------------------------
+def test_budget_plan_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        budget_plan(0.0, 10)
+    with pytest.raises(ValueError):
+        budget_plan(-1.0, 10)
+
+
+def test_budget_plan_deterministic_and_monotone():
+    chains1, steps1 = budget_plan(0.1, 24)
+    assert (chains1, steps1) == budget_plan(0.1, 24)
+    prev_effort = 0
+    for budget in (0.05, 0.3, 1.0, 5.0, 60.0):
+        chains, steps = budget_plan(budget, 24)
+        effort = chains * steps
+        assert effort >= prev_effort  # more budget never plans less work
+        prev_effort = effort
+
+
+def test_budget_plan_step_clamps():
+    _, lo = budget_plan(0.1, 1)
+    assert lo >= BUDGET_MIN_STEPS
+    _, hi = budget_plan(100.0, 10_000)
+    assert hi <= BUDGET_MAX_STEPS
+
+
+# -- greedy-mode bit identity -----------------------------------------------------
+def _failover_state(name="linear"):
+    cl = emulab_cluster()
+    gs = GlobalState(cl)
+    t = topologies.make(name)
+    a = gs.submit(t, RStormScheduler())
+    return cl, gs, t, a
+
+
+def test_greedy_engine_matches_rescheduler_exactly():
+    """mode="greedy" must replay the historical Rescheduler bit-identically:
+    same placements, same moved/unplaced report, on twin states."""
+    cl_a, gs_a, _, asg_a = _failover_state()
+    cl_b, gs_b, _, asg_b = _failover_state()
+    victim = asg_a.nodes_used()[0]
+    assert victim == asg_b.nodes_used()[0]
+
+    gs_a.fail_node(victim)
+    legacy = Rescheduler(gs_a).rebalance()
+
+    engine = ReconfigEngine(gs_b, mode="greedy")
+    engine.fail_node(victim)
+    routed = engine.rebalance()
+
+    assert routed.to_dict() == legacy.to_dict()
+    assert dict(asg_b.placements) == dict(asg_a.placements)
+    assert list(asg_b.unassigned) == list(asg_a.unassigned)
+
+
+def _acceptance_spec():
+    return ScenarioSpec(
+        name="acceptance",
+        cluster=ClusterSpec(preset="emulab_24"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            NodeFailEvent(node_id="r0n0"),
+            NodeJoinEvent(nodes=(NodeEntry("fresh0", "rack_fresh"),)),
+            RebalanceEvent(),
+        ),
+    )
+
+
+def test_greedy_scenario_trace_identical_to_default():
+    """Explicit reconfig="greedy" and the default runner produce
+    byte-identical traces — existing goldens are safe."""
+    spec = _acceptance_spec()
+    default = run_scenario(spec).to_dict()
+    greedy = run_scenario(spec, reconfig="greedy").to_dict()
+    assert greedy == default
+
+
+# -- search-mode acceptance: never worse on every failover scenario ---------------
+@pytest.mark.parametrize("name", sorted(topologies.ALL))
+def test_search_failover_never_worse_than_greedy(name):
+    """§6 acceptance: on each micro + Yahoo topology, fail a used node and
+    rebalance; search-mode simulated sink throughput >= greedy's."""
+    results = {}
+    for mode, kwargs in (("greedy", None), ("search", dict(SEARCH_KW))):
+        cl, gs, t, a = _failover_state(name)
+        victim = a.nodes_used()[0]
+        engine = ReconfigEngine(gs, mode=mode, kwargs=kwargs)
+        engine.fail_node(victim)
+        result = engine.rebalance()
+        assert a.hard_violations(t, cl) == []
+        for tid, nid in a.placements.items():
+            assert cl.nodes[nid].alive
+        moved = set(result.moved.get(t.id, ()))
+        unplaced = set(result.unplaced.get(t.id, ()))
+        assert not (moved & unplaced)
+        results[mode] = Simulator(cl).run(t, a).sink_throughput
+    assert results["search"] >= results["greedy"]
+
+
+def test_search_rebalance_reports_moved_count():
+    cl, gs, t, a = _failover_state()
+    engine = ReconfigEngine(gs, mode="search", kwargs=dict(SEARCH_KW))
+    engine.fail_node(a.nodes_used()[0])
+    result = engine.rebalance()
+    assert result.moved_count() > 0
+    assert result.moved_count() == sum(len(v) for v in result.moved.values())
+
+
+def test_budgeted_search_failover():
+    """budget_s replaces explicit chains/steps and still lands a feasible,
+    never-worse placement."""
+    cl, gs, t, a = _failover_state()
+    engine = ReconfigEngine(gs, mode="search", kwargs={"seed": 0, "budget_s": 0.1})
+    engine.fail_node(a.nodes_used()[0])
+    engine.rebalance()
+    assert a.hard_violations(t, cl) == []
+    assert not a.unassigned
+
+
+# -- LoadChangeEvent --------------------------------------------------------------
+def test_load_change_round_trips_and_validates():
+    e = LoadChangeEvent(topology_id="t", component_id="c", factor=2.5)
+    spec = ScenarioSpec(
+        name="lc",
+        cluster=ClusterSpec(preset="emulab_12"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("linear"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            LoadChangeEvent(
+                topology_id="linear_net", component_id="bolt1", factor=2.0
+            ),
+        ),
+    )
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+    assert e.validate("x") == []
+    assert LoadChangeEvent("t", "c", 0.0).validate("x")
+    assert LoadChangeEvent("", "c", 1.0).validate("x")
+
+
+def test_load_change_static_walk_rejects_bad_targets():
+    submit = SubmitEvent(
+        topology=topologies.spec("linear"),
+        scheduler=SchedulerSpec("rstorm", {}),
+    )
+    # Not-yet-submitted topology.
+    with pytest.raises(PayloadValidationError) as exc:
+        ScenarioSpec(
+            cluster=ClusterSpec(preset="emulab_12"),
+            timeline=(
+                LoadChangeEvent(
+                    topology_id="linear_net", component_id="bolt1", factor=2.0
+                ),
+                submit,
+            ),
+        ).validate()
+    assert any("not submitted" in e for e in exc.value.errors)
+    # Unknown component on a live topology.
+    with pytest.raises(PayloadValidationError) as exc:
+        ScenarioSpec(
+            cluster=ClusterSpec(preset="emulab_12"),
+            timeline=(
+                submit,
+                LoadChangeEvent(
+                    topology_id="linear_net", component_id="nope", factor=2.0
+                ),
+            ),
+        ).validate()
+    assert any("unknown component" in e for e in exc.value.errors)
+
+
+def test_load_change_shifts_simulated_throughput():
+    """A hotspot factor > 1 lowers steady-state throughput (the schedule is
+    stale); a search rebalance claws some of it back, greedy cannot."""
+    spec = ScenarioSpec(
+        name="lc",
+        cluster=ClusterSpec(preset="emulab_24"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            LoadChangeEvent(
+                topology_id="pageload", component_id="geo_enrich", factor=3.0
+            ),
+            RebalanceEvent(),
+        ),
+    )
+    greedy = run_scenario(spec)
+    tp = greedy.throughput("pageload")
+    assert tp[1] < tp[0]  # the hotspot costs throughput
+    # Nothing orphaned -> greedy rebalance is a no-op (modulo warm-start
+    # fixed-point re-entry noise).
+    assert tp[2] == pytest.approx(tp[1], rel=1e-9)
+    search = run_scenario(spec, reconfig="search", reconfig_kwargs=dict(SEARCH_KW))
+    assert search.throughput("pageload")[2] >= tp[2]
+
+
+def test_change_load_rejects_unknown_targets():
+    nimbus = Nimbus(ClusterSpec(preset="emulab_12"))
+    with pytest.raises(KeyError):
+        nimbus.change_load("ghost", "c", 2.0)
+
+
+# -- reactive policy --------------------------------------------------------------
+def _hub_with_utils(values, t=1.0):
+    hub = MetricsHub()
+    for i, v in enumerate(values):
+        hub.series("des.node_utilization", node=f"n{i}").append(t, v)
+    return hub
+
+
+def test_policy_requires_enabled_hub():
+    class Disabled:
+        enabled = False
+
+    assert ReconfigPolicy().observe(Disabled()) is False
+
+
+def test_policy_triggers_on_sustained_imbalance():
+    policy = ReconfigPolicy(util_imbalance=0.3, sustain=2, cooldown=1)
+    hot = _hub_with_utils([1.0, 0.1, 0.1, 0.1])
+    cold = _hub_with_utils([0.5, 0.4, 0.5, 0.4])
+    assert policy.observe(cold) is False
+    assert policy.observe(hot) is False  # 1st hot interval: not sustained yet
+    assert policy.observe(hot) is True  # 2nd: trigger
+    assert policy.triggers == 1
+    assert policy.observe(hot) is False  # cooldown interval
+    assert policy.observe(hot) is False  # counting again from zero
+    assert policy.observe(hot) is True
+    assert policy.triggers == 2
+
+
+def test_policy_queue_depth_signal():
+    policy = ReconfigPolicy(util_imbalance=10.0, queue_depth=50.0, sustain=1)
+    hub = _hub_with_utils([0.5, 0.5])
+    hub.series("des.task_queue_depth", topology="t", task="t/a[0]").append(1.0, 80)
+    assert policy.observe(hub) is True
+    assert policy.last_imbalance == pytest.approx(0.0)
+
+
+def test_policy_rejects_bad_thresholds():
+    with pytest.raises(ValueError):
+        ReconfigPolicy(util_imbalance=-0.1)
+    with pytest.raises(ValueError):
+        ReconfigPolicy(sustain=0)
+    with pytest.raises(ValueError):
+        ReconfigPolicy(cooldown=-1)
+    with pytest.raises(ValueError):
+        ReconfigPolicy(queue_depth=-5)
+
+
+def test_reactive_hotspot_demo_reduces_p99():
+    """End-to-end DRS demo: a LoadChangeEvent hotspot raises measured p99;
+    the policy fires exactly once (only after the hotspot, not on the
+    healthy placement) and the triggered budgeted search rebalance brings
+    p99 back down."""
+    spec = ScenarioSpec(
+        name="hotspot",
+        cluster=ClusterSpec(preset="emulab_24"),
+        timeline=(
+            SubmitEvent(
+                topology=topologies.spec("pageload"),
+                scheduler=SchedulerSpec("rstorm", {}),
+            ),
+            LoadChangeEvent(
+                topology_id="pageload", component_id="geo_enrich", factor=8.0
+            ),
+        ),
+    )
+    policy = ReconfigPolicy(util_imbalance=0.7, sustain=1, cooldown=2)
+    trace = ScenarioRunner(
+        spec,
+        engine="des",
+        des=DesSettings(duration_s=0.5, seed=0),
+        hub=MetricsHub(),
+        reconfig="search",
+        reconfig_kwargs={"seed": 0, "n_chains": 16, "steps": 600, "move_cost": 0.25},
+        policy=policy,
+    ).run()
+    kinds = [e.event["kind"] for e in trace.entries]
+    assert kinds == ["submit", "load_change", "reactive_rebalance"]
+    assert policy.triggers == 1
+    p99 = [e.topologies["pageload"]["p99_latency_s"] for e in trace.entries]
+    assert p99[1] > p99[0]  # the hotspot hurt
+    assert p99[2] < p99[1]  # the reactive rebalance helped
+    reactive = trace.entries[2]
+    assert reactive.event["trigger_step"] == 1
+    assert sum(len(v) for v in reactive.outcome["moved"].values()) > 0

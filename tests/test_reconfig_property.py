@@ -1,0 +1,100 @@
+"""Hypothesis property tests for the reconfiguration plane (skipped when the
+``hypothesis`` dependency is absent — the container does not bake it in).
+
+Invariants, for every reconfig mode across seed × failure sweeps:
+
+* a task is never both moved and unplaced by one rebalance;
+* no hard capacity constraint is violated and every placement is on a live
+  node after any fail / scale-up / rebalance trajectory;
+* search-mode rebalance never loses simulated sink throughput versus the
+  greedy patch-up on the same failover (the engine's never-worse guard).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (  # noqa: E402
+    GlobalState,
+    NodeSpec,
+    RStormScheduler,
+    emulab_cluster,
+)
+from repro.core.reconfig import ReconfigEngine  # noqa: E402
+from repro.stream import Simulator, topologies  # noqa: E402
+
+FAST_SEARCH = {"n_chains": 8, "steps": 120}
+
+
+def _submit(name):
+    cl = emulab_cluster()
+    gs = GlobalState(cl)
+    t = topologies.make(name)
+    a = gs.submit(t, RStormScheduler())
+    return cl, gs, t, a
+
+
+def _fail_one(cl, a, engine, victim_idx):
+    """Fail the victim_idx-th (mod) live used node and rebalance; returns the
+    RebalanceResult, or None when no used node is left alive."""
+    used = [n for n in sorted(set(a.placements.values())) if cl.nodes[n].alive]
+    if not used:
+        return None
+    engine.fail_node(used[victim_idx % len(used)])
+    return engine.rebalance()
+
+
+def _check_invariants(cl, t, a, result):
+    if result is not None:
+        moved = {tid for v in result.moved.values() for tid in v}
+        unplaced = {tid for v in result.unplaced.values() for tid in v}
+        assert not (moved & unplaced)
+    assert a.hard_violations(t, cl) == []
+    for _, nid in a.placements.items():
+        assert cl.nodes[nid].alive
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(sorted(topologies.ALL)),
+    victim_idx=st.integers(0, 4),
+    seed=st.integers(0, 3),
+)
+def test_search_failover_never_loses_throughput(name, victim_idx, seed):
+    """Single-failover sweep: identical victim under both modes; search's
+    simulated sink throughput is never below greedy's."""
+    tps = {}
+    for mode, kwargs in (
+        ("greedy", None),
+        ("search", dict(FAST_SEARCH, seed=seed)),
+    ):
+        cl, gs, t, a = _submit(name)
+        engine = ReconfigEngine(gs, mode=mode, kwargs=kwargs)
+        result = _fail_one(cl, a, engine, victim_idx)
+        _check_invariants(cl, t, a, result)
+        tps[mode] = Simulator(cl).run(t, a).sink_throughput
+    assert tps["search"] >= tps["greedy"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    name=st.sampled_from(sorted(topologies.ALL_MICRO)),
+    mode=st.sampled_from(["greedy", "search"]),
+    victim_idx=st.integers(0, 4),
+    n_failures=st.integers(1, 2),
+    seed=st.integers(0, 3),
+)
+def test_reconfig_trajectory_invariants(name, mode, victim_idx, n_failures, seed):
+    """Longer trajectories (fail* -> scale-up -> rebalance) keep every
+    structural invariant in both modes."""
+    cl, gs, t, a = _submit(name)
+    kwargs = dict(FAST_SEARCH, seed=seed) if mode == "search" else None
+    engine = ReconfigEngine(gs, mode=mode, kwargs=kwargs)
+    for _ in range(n_failures):
+        result = _fail_one(cl, a, engine, victim_idx)
+        _check_invariants(cl, t, a, result)
+    result = engine.handle_scale_up(
+        [NodeSpec("fresh0", "rack_fresh", 100.0, 4096.0)]
+    )
+    _check_invariants(cl, t, a, result)
